@@ -1,0 +1,91 @@
+"""Shared harness for the paper-table benchmarks.
+
+All benches run CPU-sized stand-ins of the paper's Llama models (the full
+sizes are exercised via the dry-run): same family, same optimizer code
+paths, deterministic synthetic C4 stand-in data. Reported columns:
+final train loss, optimizer-state bytes (the paper's memory claim at
+exact ratio), and wall-clock per step (CPU; relative ordering only —
+absolute GPU times live in the paper).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import SyntheticLM
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.api import get_optimizer
+from repro.train.steps import TrainState, make_train_step
+
+
+def tiny_llama(d: int = 128, layers: int = 4, heads: int = 4,
+               d_ff: int = 344, vocab: int = 512) -> ModelConfig:
+    return ModelConfig(
+        name=f"llama-tiny-d{d}", family="dense", d_model=d, n_heads=heads,
+        n_kv_heads=heads, d_ff=d_ff, vocab_size=vocab,
+        schedule=((("attn",), layers),), param_dtype="float32",
+        compute_dtype="float32", remat=False, q_chunk=64, kv_chunk=64)
+
+
+def state_bytes(opt_state) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(opt_state)
+               if hasattr(x, "size"))
+
+
+def lowrank_state_bytes(opt_state) -> int:
+    """Bytes of the low-rank leaves only (excludes the AdamW fallback for
+    embeddings/norms, which is identical across the compared optimizers)."""
+    total = 0
+    for leaf in jax.tree.leaves(opt_state.leaves,
+                                is_leaf=lambda x: hasattr(x, "_fields")):
+        if type(leaf).__name__ != "FullAdamLeaf":
+            total += state_bytes(leaf)
+    return total
+
+
+def shared_basis_bytes(opt_state) -> int:
+    return sum(v.size * v.dtype.itemsize for v in opt_state.bases.values())
+
+
+def train(cfg, optimizer_name: str, steps: int = 40, *, seq: int = 64,
+          batch: int = 8, lr: float = 3e-3, seed: int = 0,
+          **opt_kw) -> dict:
+    """Train `steps` steps; return loss trajectory + memory + timing."""
+    opt = get_optimizer(optimizer_name, lr=lr, **opt_kw)
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    state = TrainState(jnp.zeros((), jnp.int32), params, opt.init(params))
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq,
+                     global_batch=batch, seed=seed)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    losses = []
+    t_steps = []
+    for i in range(steps):
+        b = ds.batch(jnp.int32(i))
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, b)
+        jax.block_until_ready(metrics["loss"])
+        t_steps.append(time.perf_counter() - t0)
+        losses.append(float(metrics["ce"]))
+    return {
+        "optimizer": optimizer_name,
+        "losses": losses,
+        "final_loss": sum(losses[-5:]) / 5,
+        "opt_state_bytes": state_bytes(state.opt_state),
+        "lowrank_state_bytes": lowrank_state_bytes(state.opt_state),
+        "shared_basis_bytes": shared_basis_bytes(state.opt_state),
+        # skip compile step for timing
+        "s_per_step": sum(t_steps[2:]) / max(len(t_steps) - 2, 1),
+        "opt_kw": opt_kw,
+    }
+
+
+def fmt_row(name: str, r: dict, extra: str = "") -> str:
+    return (f"{name:28s} loss={r['final_loss']:.4f} "
+            f"state={r['opt_state_bytes'] / 1e6:8.2f}MB "
+            f"lowrank={r['lowrank_state_bytes'] / 1e6:8.2f}MB "
+            f"basis={r['shared_basis_bytes'] / 1e6:6.2f}MB "
+            f"{r['s_per_step'] * 1e3:7.1f}ms/step {extra}")

@@ -1,0 +1,38 @@
+"""Paper Table 2 / Figure 2: AdamW vs LDAdamW vs DCT-AdamW pre-training.
+
+Claims checked: DCT-AdamW loss <= LDAdamW loss (approx); DCT-AdamW
+low-rank state < LDAdamW state (two stored projection bases vs two index
+sets + shared DCT); full AdamW is the reference lower bound on loss.
+"""
+from __future__ import annotations
+
+from .common import fmt_row, tiny_llama, train
+
+
+def run(steps: int = 40, rank: int = 16) -> list[dict]:
+    cfg = tiny_llama()
+    rows = []
+    for name, kw in (
+        ("adamw", {}),
+        ("ldadamw", {"rank": rank}),
+        ("dct_adamw", {"rank": rank, "ef_dtype": "q8"}),
+        ("dct_adamw", {"rank": rank, "ef_dtype": "fp32"}),
+    ):
+        r = train(cfg, name, steps=steps, **kw)
+        label = name + (f"[{kw.get('ef_dtype', '')}]" if name == "dct_adamw"
+                        else "")
+        r["label"] = label
+        rows.append(r)
+        print(fmt_row(label, r))
+    byl = {r["label"]: r for r in rows}
+    dct, ld = byl["dct_adamw[q8]"], byl["ldadamw"]
+    print(f"[check] dct_adamw[q8]_loss<=ldadamw_loss*1.05: "
+          f"{'PASS' if dct['final_loss'] <= ld['final_loss'] * 1.05 else 'FAIL'} "
+          f"({dct['final_loss']:.4f} vs {ld['final_loss']:.4f})")
+    print(f"[check] dct q8 lowrank state < ldadamw: "
+          f"{'PASS' if dct['lowrank_state_bytes'] < ld['lowrank_state_bytes'] else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

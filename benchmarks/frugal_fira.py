@@ -1,0 +1,38 @@
+"""Paper Appendix G Table 6: FRUGAL / FIRA with different projections.
+
+Checks: DCT projection approximates SVD inside both optimizers (loss gap
+small) and beats Random / RandPerm in FRUGAL; runtime of the DCT variant
+is below SVD (no per-refresh SVD factorization).
+"""
+from __future__ import annotations
+
+from .common import fmt_row, tiny_llama, train
+
+
+def run(steps: int = 40, rank: int = 16, update_interval: int = 10
+        ) -> list[dict]:
+    cfg = tiny_llama()
+    rows = []
+    for opt, proj in (("frugal", "svd"), ("frugal", "dct"),
+                      ("frugal", "random"), ("frugal", "randperm"),
+                      ("fira", "svd"), ("fira", "dct")):
+        r = train(cfg, opt, steps=steps, rank=rank, projector=proj,
+                  update_interval=update_interval)
+        r["label"] = f"{opt}[{proj}]"
+        rows.append(r)
+        print(fmt_row(r["label"], r))
+    byl = {r["label"]: r for r in rows}
+    for opt in ("frugal", "fira"):
+        svd, dct = byl[f"{opt}[svd]"], byl[f"{opt}[dct]"]
+        gap = dct["final_loss"] - svd["final_loss"]
+        print(f"[check] {opt}: dct-svd loss gap = {gap:+.4f} "
+              f"({'PASS' if gap < 0.15 else 'FAIL'} < 0.15)")
+    fr = byl["frugal[dct]"]
+    rnd = byl["frugal[random]"]
+    print(f"[check] frugal: dct<=random*1.05: "
+          f"{'PASS' if fr['final_loss'] <= rnd['final_loss'] * 1.05 else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Appendix C/D Tables 4-5: Makhoul FFT-DCT vs matmul timing.
+
+On this container the backend is CPU, where the FFT path is the right
+algorithm (the paper's GPU setting) — so the paper's qualitative claim
+(Makhoul wins for large n, especially R < C) is reproducible here, while
+DESIGN.md §2 explains why the TPU production path inverts the choice
+(MXU matmul + fused Pallas kernel).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dct import dct2_matrix, makhoul_dct2
+
+
+def _time(fn, *args, warmup=3, iters=10):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(sizes=((1024, 1024), (4096, 1024), (1024, 4096))) -> list[dict]:
+    rows = []
+    for r, c in sizes:
+        g = jnp.asarray(
+            np.random.default_rng(0).standard_normal((r, c)), jnp.float32)
+        q = dct2_matrix(c, jnp.float32)
+        mm = jax.jit(lambda g, q: g @ q)
+        fft = jax.jit(makhoul_dct2)
+        t_mm = _time(mm, g, q)
+        t_fft = _time(fft, g)
+        ratio = t_mm / t_fft
+        rows.append({"shape": (r, c), "matmul_s": t_mm, "makhoul_s": t_fft,
+                     "ratio": ratio})
+        print(f"({r:5d},{c:5d})  matmul={t_mm * 1e3:8.3f}ms  "
+              f"makhoul={t_fft * 1e3:8.3f}ms  ratio={ratio:6.2f}x "
+              f"({'makhoul wins' if ratio > 1 else 'matmul wins'})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

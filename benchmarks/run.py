@@ -1,0 +1,61 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  python -m benchmarks.run [--fast] [--only trion_vs_dion,...]
+
+Sections:
+  trion_vs_dion        Table 1 / Fig 3   Trion vs Dion pre-training
+  dct_adamw            Table 2 / Fig 2   AdamW vs LDAdamW vs DCT-AdamW
+  makhoul              Tables 4-5        FFT-DCT vs matmul timing
+  frugal_fira          Table 6           projection swap in FRUGAL/FIRA
+  projection_errors    Fig 1 / App F     factorization error Trion vs Dion
+  finetune             Tables 7-8        fine-tune proxy across optimizers
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer steps (CI smoke)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    steps = 15 if args.fast else 40
+
+    from . import (dct_adamw_vs_ldadamw, finetune, frugal_fira,
+                   makhoul_vs_matmul, projection_errors, trion_vs_dion)
+
+    sections = {
+        "trion_vs_dion": lambda: trion_vs_dion.run(steps=steps),
+        "dct_adamw": lambda: dct_adamw_vs_ldadamw.run(steps=steps),
+        "makhoul": lambda: makhoul_vs_matmul.run(
+            sizes=((512, 512), (2048, 512), (512, 2048)) if args.fast
+            else ((1024, 1024), (4096, 1024), (1024, 4096))),
+        "frugal_fira": lambda: frugal_fira.run(steps=steps),
+        "projection_errors": lambda: projection_errors.run(
+            steps=10 if args.fast else 30),
+        "finetune": lambda: finetune.run(
+            pretrain_steps=10 if args.fast else 30,
+            ft_steps=10 if args.fast else 25),
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    failures = 0
+    for name in chosen:
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        try:
+            sections[name]()
+        except Exception as e:                       # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[bench] {name} FAILED: {e}")
+            failures += 1
+        print(f"[bench] {name} done in {time.perf_counter() - t0:.1f}s")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""repro — FFT/DCT dynamic subspace selection for low-rank adaptive
+optimization (Trion + DCT-AdamW), as a multi-pod JAX training/inference
+framework. See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "0.1.0"

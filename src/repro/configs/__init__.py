@@ -1,0 +1,8 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from .registry import ARCHS, get_config, list_archs
+from .shapes import SHAPES, cell_applicable, input_specs, skip_reason
+
+__all__ = ["ARCHS", "get_config", "list_archs", "SHAPES", "input_specs",
+           "cell_applicable", "skip_reason"]

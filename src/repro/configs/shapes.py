@@ -1,0 +1,94 @@
+"""Assigned input shapes x applicability + ShapeDtypeStruct input specs.
+
+The four LM shapes from the brief. ``input_specs(cfg, shape)`` returns the
+exact pytree of jax.ShapeDtypeStruct the corresponding step function is
+lowered with — weak-type-correct, shardable, zero allocation. Modality
+frontends are stubs: whisper gets precomputed (B, 1500, d) frame
+embeddings; the VLM gets (B, n_image_tokens, d) patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def skip_reason(cfg, shape_name: str) -> str | None:
+    """None if the (arch, shape) cell runs; otherwise why it is skipped
+    (recorded in DESIGN.md / EXPERIMENTS.md per the brief)."""
+    spec = SHAPES[shape_name]
+    if spec.name == "long_500k" and not cfg.supports_long_context:
+        return ("pure full-attention arch: no sub-quadratic path at 524k "
+                "context (skip noted in DESIGN.md §4)")
+    return None
+
+
+def cell_applicable(cfg, shape_name: str) -> bool:
+    return skip_reason(cfg, shape_name) is None
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _modality_extras(cfg, batch: int) -> dict:
+    extras = {}
+    if cfg.encoder_layers:
+        extras["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                                jnp.dtype(cfg.compute_dtype))
+    if cfg.n_image_tokens:
+        extras["image_embeds"] = _sds((batch, cfg.n_image_tokens, cfg.d_model),
+                                      jnp.dtype(cfg.compute_dtype))
+    return extras
+
+
+def batch_specs(cfg, shape_name: str, *, with_targets: bool = True) -> dict:
+    """Input batch pytree for train/prefill entry points."""
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if with_targets and spec.kind == "train":
+        out["targets"] = _sds((b, s), jnp.int32)
+    out.update(_modality_extras(cfg, b))
+    return out
+
+
+def decode_specs(cfg, shape_name: str) -> dict:
+    """Inputs for serve_step: one new token against a seq_len cache."""
+    from repro.models.transformer import init_cache
+
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    spec = SHAPES[shape_name]
+    if spec.kind == "decode":
+        return decode_specs(cfg, shape_name)
+    return batch_specs(cfg, shape_name)

@@ -1,0 +1,104 @@
+"""Discrete Cosine Transform bases and the fast Makhoul FFT transform.
+
+Conventions (paper §2.2 / Appendix A):
+  * ``dct3_matrix(n)`` is the paper's ``Q``: ``Q[i, j] = sqrt(2/n) *
+    cos(i * (2j + 1) * pi / (2n))`` with the first **row** divided by
+    ``sqrt(2)``. Rows are the orthonormal cosine basis vectors;
+    ``Q @ Q.T = Q.T @ Q = I``.
+  * ``dct2_matrix(n) = dct3_matrix(n).T`` (paper: "the DCT-II matrix is the
+    transpose of DCT-III").
+  * ``x @ dct2_matrix(n)`` computes the row-wise **orthonormal DCT-II** of
+    ``x`` — exactly what Makhoul's N-point FFT algorithm computes in
+    ``O(n log n)`` per row (paper Appendix D). This is the similarity matrix
+    ``S`` of the dynamic column selection.
+
+Precision note: naive ``cos(i*(2j+1)*pi/(2n))`` in float32 loses ~3 decimal
+digits for n ~ 1e4 because the argument grows to ``O(n * pi)``. We reduce the
+integer phase ``i*(2j+1) mod 4n`` exactly in int32 first (cos has period
+``2*pi`` = phase ``4n``), so every cosine argument is < 2*pi and float32 gives
+~1e-7 accurate entries at any supported size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# (n-1)*(2n-1) must fit int32 for the exact phase reduction.
+_MAX_DCT_ORDER = 32_000
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dtype"))
+def dct3_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Paper Appendix A DCT-III matrix of order ``n`` (orthonormal rows/cols)."""
+    if n > _MAX_DCT_ORDER:
+        raise ValueError(f"DCT order {n} exceeds int32-exact phase range")
+    i = jax.lax.iota(jnp.int32, n)[:, None]
+    j = jax.lax.iota(jnp.int32, n)[None, :]
+    phase = (i * (2 * j + 1)) % (4 * n)           # exact in int32
+    ang = phase.astype(jnp.float32) * (np.pi / (2.0 * n))
+    q = np.sqrt(2.0 / n).astype(np.float32) * jnp.cos(ang)
+    q = q.at[0, :].multiply(np.float32(1.0 / np.sqrt(2.0)))
+    return q.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dtype"))
+def dct2_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """DCT-II matrix = transpose of DCT-III. ``x @ dct2_matrix(n)`` = DCT-II."""
+    return dct3_matrix(n, dtype).T
+
+
+def dct_basis_np(n: int) -> np.ndarray:
+    """Float64 NumPy DCT-III basis — the test oracle."""
+    i = np.arange(n, dtype=np.float64)[:, None]
+    j = np.arange(n, dtype=np.float64)[None, :]
+    q = np.sqrt(2.0 / n) * np.cos(i * (2.0 * j + 1.0) * (np.pi / (2.0 * n)))
+    q[0, :] /= np.sqrt(2.0)
+    return q
+
+
+@functools.lru_cache(maxsize=64)
+def _makhoul_permutation(n: int) -> np.ndarray:
+    """Makhoul input permutation: [a b c d e f] -> [a c e f d b].
+
+    Even original indices in increasing order followed by odd original indices
+    in decreasing order (paper Appendix D step 1). Cached per size.
+    """
+    idx = np.arange(n)
+    return np.ascontiguousarray(np.concatenate([idx[0::2], idx[1::2][::-1]]))
+
+
+@jax.jit
+def makhoul_dct2(x: jax.Array) -> jax.Array:
+    """Row-wise orthonormal DCT-II via Makhoul's N-point FFT algorithm.
+
+    Numerically equal (to fp32 tolerance) to ``x @ dct2_matrix(n, x.dtype)``.
+    Steps (paper Appendix D): permute -> FFT -> twiddle by
+    ``W_k = exp(-i*pi*k/(2n))`` -> real part -> orthonormal scaling.
+    """
+    n = x.shape[-1]
+    perm = jnp.asarray(_makhoul_permutation(n))
+    v = jnp.take(x.astype(jnp.float32), perm, axis=-1)
+    vf = jnp.fft.fft(v, axis=-1)
+    k = jnp.arange(n, dtype=jnp.float32)
+    w = jnp.exp(-1j * (np.pi / (2.0 * n)) * k.astype(jnp.complex64))
+    y = 2.0 * jnp.real(vf * w)                     # factor-2 DCT-II
+    # orthonormal scaling: y0 *= sqrt(1/(4n)); yk *= sqrt(1/(2n))
+    scale = jnp.full((n,), np.sqrt(1.0 / (2.0 * n)), dtype=jnp.float32)
+    scale = scale.at[0].set(np.sqrt(1.0 / (4.0 * n)))
+    return (y * scale).astype(x.dtype)
+
+
+def dct2(x: jax.Array, method: str = "matmul") -> jax.Array:
+    """Row-wise orthonormal DCT-II: the similarity transform ``S = G @ Q``.
+
+    ``method='matmul'`` is the TPU/MXU production path (see DESIGN.md §2);
+    ``method='fft'`` is Makhoul's algorithm — the host/GPU fast path and the
+    large-n oracle.
+    """
+    if method == "fft":
+        return makhoul_dct2(x)
+    n = x.shape[-1]
+    return x @ dct2_matrix(n, dtype=x.dtype)

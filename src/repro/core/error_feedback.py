@@ -1,0 +1,44 @@
+"""Quantized error-feedback buffers (paper §2.4; MicroAdam-style).
+
+The EF buffer stores the low-rank projection residual ``Xi = G - g Q_r^T`` and
+is re-added to the next gradient. DCT-AdamW supports storing it in 8-bit with
+a per-row fp32 scale ("the lowest resolution we can quantize EF to is 8 bits
+without degrading the optimizer performance", §2.4).
+
+Symmetric linear quantization: ``q = round(x / s)``, ``s = max|row| / 127``.
+Broadcasts over leading stacked axes (rows = axis -2's companion: we scale per
+last-axis row vector, i.e. per (..., m) row of an (..., m, n) matrix).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedBuffer(NamedTuple):
+    """int8 payload + per-row scale; together a lossy fp tensor."""
+
+    q: jax.Array          # (..., m, n) int8
+    scale: jax.Array      # (..., m, 1) fp32
+
+
+def quantize_q8(x: jax.Array) -> QuantizedBuffer:
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return QuantizedBuffer(q=q, scale=scale)
+
+
+def dequantize_q8(buf: QuantizedBuffer, dtype=jnp.float32) -> jax.Array:
+    return (buf.q.astype(jnp.float32) * buf.scale).astype(dtype)
+
+
+def zeros_q8(shape, batch_shape=()) -> QuantizedBuffer:
+    full = tuple(batch_shape) + tuple(shape)
+    return QuantizedBuffer(
+        q=jnp.zeros(full, dtype=jnp.int8),
+        scale=jnp.ones(full[:-1] + (1,), dtype=jnp.float32),
+    )

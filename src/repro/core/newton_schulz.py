@@ -1,0 +1,53 @@
+"""Newton–Schulz orthogonalization (Muon's NS5 polynomial iteration).
+
+Pushes the singular values of a matrix toward 1, approximating ``U V^T`` from
+the SVD. Trion's key trick (paper §2.3) is to run this on the **low-rank**
+factor ``b_t ∈ R^{m×r}`` instead of the full momentum ``B_t ∈ R^{m×n}``, so
+the Gram matrix is ``r×r``.
+
+Coefficients are Keller Jordan's quintic ``(3.4445, -4.7750, 2.0315)``.
+Broadcasts over leading stacked axes; matmuls accumulate in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def _ns_step(x: jax.Array, coeffs=NS_COEFFS) -> jax.Array:
+    a, b, c = coeffs
+    # x: (..., k, m) with k <= m (wide orientation)
+    xxt = jnp.einsum("...km,...nm->...kn", x, x, preferred_element_type=jnp.float32)
+    bx_cx2 = b * xxt + c * jnp.einsum(
+        "...kn,...nj->...kj", xxt, xxt, preferred_element_type=jnp.float32
+    )
+    return a * x + jnp.einsum("...kn,...nm->...km", bx_cx2, x,
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "eps"))
+def newton_schulz(m: jax.Array, steps: int = 5, eps: float = 1e-7) -> jax.Array:
+    """Orthogonalize the last two dims of ``m`` via ``steps`` NS iterations.
+
+    Works in the "wide" orientation (rows <= cols) so the Gram matrix has the
+    small dimension — for Trion's (m, r) input with m >= r this means all NS
+    matmuls are r-sized. fp32 internally; returns input dtype.
+    """
+    x = m.astype(jnp.float32)
+    rows, cols = x.shape[-2], x.shape[-1]
+    transposed = rows > cols
+    if transposed:
+        x = jnp.swapaxes(x, -1, -2)
+    norm = jnp.linalg.norm(x, axis=(-2, -1), keepdims=True)
+    x = x / (norm + eps)
+    x = jax.lax.fori_loop(0, steps, lambda _, v: _ns_step(v), x) if steps > 3 else x
+    if steps <= 3:  # unrolled for tiny step counts (cheaper than a loop)
+        for _ in range(steps):
+            x = _ns_step(x)
+    if transposed:
+        x = jnp.swapaxes(x, -1, -2)
+    return x.astype(m.dtype)

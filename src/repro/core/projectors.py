@@ -1,0 +1,155 @@
+"""Pluggable low-rank projectors.
+
+The paper's claim is that the DCT dynamic-column-selection projector is a
+drop-in replacement for SVD/QR/power-iteration projectors inside *any*
+low-rank optimizer (GaLore / FRUGAL / FIRA / LDAdamW). This module is that
+plug point: every projector maps a gradient matrix ``G (..., m, n)`` (already
+oriented so the *projected* dimension is the last one, ``n <= m``) to a rank-r
+right basis, and exposes project / backproject.
+
+State layout per kind (broadcast over leading stacked-layer axes):
+  dct      -> int32 indices (..., r) into the shared DCT basis (paper: "only
+              r integers per layer")
+  svd      -> Q (..., n, r) top right-singular-vector basis
+  power    -> Q (..., n, r) block-power-iteration basis (QR-orthonormalized)
+  random   -> Q (..., n, r) random semi-orthogonal (FRUGAL baseline)
+  randperm -> int32 indices (..., r) random column subset (FRUGAL baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .dct import dct2_matrix
+from .selection import back_project, column_norms, gather_columns, select_top_r
+
+PROJECTOR_KINDS = ("dct", "svd", "power", "random", "randperm")
+
+
+@dataclasses.dataclass(frozen=True)
+class Projector:
+    """Rank-r right-projector family. ``shared_q`` holds the DCT basis when
+    kind == 'dct' (one per device for the whole model — the paper's memory
+    win); other kinds keep a per-matrix basis in their state."""
+
+    kind: str
+    r: int
+    norm: str = "l2"  # ranking norm for dct
+
+    def init(self, shape: tuple[int, ...], key: jax.Array | None = None) -> Any:
+        """Initial state for a (stacked) matrix of ``shape`` (..., m, n)."""
+        *batch, m, n = shape
+        r = min(self.r, n)
+        if self.kind in ("dct", "randperm"):
+            idx = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32), (*batch, r))
+            return idx
+        if self.kind in ("svd", "power", "random"):
+            eye = jnp.eye(n, r, dtype=jnp.float32)
+            return jnp.broadcast_to(eye, (*batch, n, r))
+        raise ValueError(f"unknown projector kind {self.kind!r}")
+
+    # -- basis refresh ------------------------------------------------------
+    def update(self, g: jax.Array, state: Any, shared_q: jax.Array | None = None,
+               key: jax.Array | None = None) -> Any:
+        """Recompute the basis from the current gradient/momentum ``g``."""
+        n = g.shape[-1]
+        r = min(self.r, n)
+        gf = g.astype(jnp.float32)
+        if self.kind == "dct":
+            s = gf @ shared_q.astype(jnp.float32)
+            return select_top_r(column_norms(s, self.norm), r)
+        if self.kind == "svd":
+            _, _, vt = jnp.linalg.svd(gf, full_matrices=False)
+            return jnp.swapaxes(vt[..., :r, :], -1, -2)
+        if self.kind == "power":
+            # one block power iteration warm-started from the previous basis
+            z = jnp.einsum("...mn,...nr->...mr", gf, state)
+            y = jnp.einsum("...mn,...mr->...nr", gf, z)
+            q, _ = jnp.linalg.qr(y)
+            return q
+        if self.kind == "random":
+            gauss = jax.random.normal(key, (*g.shape[:-2], n, r), dtype=jnp.float32)
+            q, _ = jnp.linalg.qr(gauss)
+            return q
+        if self.kind == "randperm":
+            perm = jax.random.permutation(key, n)[:r]
+            return jnp.broadcast_to(jnp.sort(perm).astype(jnp.int32),
+                                    (*g.shape[:-2], r))
+        raise ValueError(self.kind)
+
+    # -- application --------------------------------------------------------
+    def project(self, g: jax.Array, state: Any,
+                shared_q: jax.Array | None = None) -> jax.Array:
+        """``g_low = G @ Q_r`` -> (..., m, r)."""
+        if self.kind == "randperm":
+            # Q = I: projection is a pure column take (no matmul)
+            return jnp.take_along_axis(g, state[..., None, :], axis=-1)
+        if self.kind == "dct":
+            qr = gather_columns(shared_q, state)          # (..., n, r)
+            return jnp.einsum("...mn,...nr->...mr", g, qr.astype(g.dtype))
+        return jnp.einsum("...mn,...nr->...mr", g, state.astype(g.dtype))
+
+    def backproject(self, low: jax.Array, state: Any,
+                    shared_q: jax.Array | None = None, n: int | None = None
+                    ) -> jax.Array:
+        """``G_hat = g_low @ Q_r^T`` -> (..., m, n)."""
+        if self.kind == "randperm":
+            if n is None:
+                if shared_q is None:
+                    raise ValueError(
+                        "randperm backproject needs the full dimension `n` "
+                        "(or a shared_q to infer it from)")
+                n = int(shared_q.shape[-1])
+            out = jnp.zeros((*low.shape[:-1], n), low.dtype)
+            idx = jnp.broadcast_to(state[..., None, :], low.shape[:-1] + state.shape[-1:])
+            return jnp.put_along_axis(out, idx, low, axis=-1, inplace=False)
+        if self.kind == "dct":
+            return back_project(low, shared_q.astype(low.dtype), state)
+        return jnp.einsum("...mr,...nr->...mn", low, state.astype(low.dtype))
+
+    def basis_matrix(self, state: Any, n: int,
+                     shared_q: jax.Array | None = None) -> jax.Array:
+        """Materialize Q_r (..., n, r) — for tests / rotation matmul flag."""
+        if self.kind == "randperm":
+            return jnp.swapaxes(jnp.eye(n, dtype=jnp.float32)[state], -1, -2)
+        if self.kind == "dct":
+            return gather_columns(shared_q, state)
+        return state
+
+    @property
+    def needs_shared_basis(self) -> bool:
+        return self.kind == "dct"
+
+    @property
+    def needs_key(self) -> bool:
+        return self.kind in ("random", "randperm")
+
+
+def shared_basis_for(kind: str, n: int, dtype=jnp.float32) -> jax.Array | None:
+    """The model-wide shared basis: the DCT matrix for 'dct' (one per device
+    for the entire model — the paper's memory win), None otherwise."""
+    if kind == "dct":
+        return dct2_matrix(n, dtype)
+    return None
+
+
+def rotation_matrix(prev_state: Any, crt_state: Any, projector: Projector,
+                    n: int, shared_q: jax.Array | None = None,
+                    exact_matmul: bool = False) -> jax.Array:
+    """Subspace rotation ``R = Q_prev^T Q_crt`` (paper Alg. 3 line 8).
+
+    For index-based projectors (dct/randperm) the columns come from one
+    orthogonal matrix, so ``R[a, b] = 1 iff prev_idx[a] == crt_idx[b]`` — a
+    0/1 partial permutation. We build it by index comparison in O(r^2) int
+    ops instead of the O(n r^2) matmul (exact algebraic equivalence; see
+    DESIGN.md §1). ``exact_matmul=True`` restores the paper-literal matmul.
+    """
+    if projector.kind in ("dct", "randperm") and not exact_matmul:
+        return (prev_state[..., :, None] == crt_state[..., None, :]).astype(jnp.float32)
+    qp = projector.basis_matrix(prev_state, n, shared_q)
+    qc = projector.basis_matrix(crt_state, n, shared_q)
+    return jnp.einsum("...nr,...ns->...rs", qp.astype(jnp.float32),
+                      qc.astype(jnp.float32))

@@ -1,0 +1,95 @@
+"""Dynamic column selection (paper §2.1, Appendix B).
+
+Given the similarity matrix ``S = G @ Q`` (scalar products of rows of ``G``
+with columns of the fixed orthogonal basis ``Q``), rank the columns of ``S``
+by their l1/l2 norm and return the indices of the top-``r``. Selecting the
+top-r column alignments is the *optimal* column subset of ``Q`` for Frobenius
+reconstruction error (paper §4.1) and yields a contractive compressor:
+``||G - Q_r Q_r^T G||_F^2 <= (1 - r/n) ||G||_F^2``.
+
+All functions broadcast over arbitrary leading (stacked-layer / expert) axes:
+the matrix lives in the last two dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def column_norms(s: jax.Array, ord: str = "l2") -> jax.Array:
+    """Per-column ranking statistic of ``S`` over the row axis (-2).
+
+    ``l2`` returns *squared* l2 norms (monotone-equivalent for ranking, one
+    multiply cheaper, and exactly the quantity in the §4.1 optimality proof).
+    Accumulates in fp32 regardless of input dtype.
+    """
+    sf = s.astype(jnp.float32)
+    if ord == "l2":
+        return jnp.sum(sf * sf, axis=-2)
+    if ord == "l1":
+        return jnp.sum(jnp.abs(sf), axis=-2)
+    raise ValueError(f"unknown norm {ord!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("r", "sort"))
+def select_top_r(norms: jax.Array, r: int, sort: bool = True) -> jax.Array:
+    """Indices of the ``r`` largest entries of ``norms`` (last axis).
+
+    ``sort=True`` returns indices in ascending index order — a canonical form
+    that makes the subspace-rotation bookkeeping deterministic and makes the
+    back-projection gather's access pattern monotone (TPU-friendly).
+    """
+    _, idx = jax.lax.top_k(norms, r)
+    if sort:
+        idx = jnp.sort(idx, axis=-1)
+    return idx.astype(jnp.int32)
+
+
+def dynamic_column_selection(
+    s: jax.Array, r: int, ord: str = "l2", sort: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """Full two-step procedure: rank columns of ``S``, return ``(idx, b)``.
+
+    ``idx``: (..., r) int32 column indices into ``Q``;
+    ``b``: (..., m, r) the low-rank factor — extracted from ``S`` directly
+    (paper Alg. 1 line 8: no second projection matmul is needed).
+    """
+    idx = select_top_r(column_norms(s, ord), r, sort=sort)
+    b = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
+    return idx, b
+
+
+def gather_columns(q: jax.Array, idx: jax.Array) -> jax.Array:
+    """``Q_r = Q[:, idx]`` with broadcasting over leading axes of ``idx``.
+
+    ``q``: (n, n) shared basis; ``idx``: (..., r) per-layer indices.
+    Returns (..., n, r). Implemented as a *row* gather of ``Q.T`` (contiguous
+    rows on TPU) followed by a transpose of the last two axes.
+    """
+    return jnp.swapaxes(jnp.take(q.T, idx, axis=0), -1, -2)
+
+
+def back_project(b: jax.Array, q: jax.Array, idx: jax.Array) -> jax.Array:
+    """``B_hat = b @ Q[:, idx].T`` — low-rank factor back to full width.
+
+    ``b``: (..., m, r); ``q``: (n, n); ``idx``: (..., r) -> (..., m, n).
+    ``Q[:, idx].T == Q.T[idx, :]`` is a contiguous row gather; the fused TPU
+    version that never materializes the gather is kernels/colgather_matmul.
+    """
+    qr_t = jnp.take(q.T, idx, axis=0)       # (..., r, n)
+    return b @ qr_t
+
+
+def reconstruction_error_sq(g: jax.Array, q: jax.Array, idx: jax.Array) -> jax.Array:
+    """``||G - Q_r Q_r^T' G||_F^2`` via the §4.1 identity (right projection):
+
+    ``err = ||G||_F^2 - sum_selected ||G q_i||_2^2`` — no reconstruction
+    materialized.
+    """
+    s = g.astype(jnp.float32) @ q.astype(jnp.float32)
+    norms = column_norms(s, "l2")
+    total = jnp.sum(g.astype(jnp.float32) ** 2, axis=(-2, -1))
+    sel = jnp.take_along_axis(norms, idx, axis=-1).sum(axis=-1)
+    return total - sel

@@ -1,0 +1,4 @@
+from .synthetic import SyntheticLM, make_batch_fn
+from .pipeline import DataPipeline
+
+__all__ = ["SyntheticLM", "make_batch_fn", "DataPipeline"]

@@ -1,0 +1,62 @@
+"""Host-side data pipeline with prefetch + straggler mitigation.
+
+Production posture (DESIGN.md §5): data is host-indexed and deterministic
+in (seed, step), so any host can recompute any slice — a re-shard or a
+restarted worker never loses or duplicates samples. The pipeline
+prefetches ``depth`` batches on a thread, and ``get`` has a timeout: if a
+batch misses the deadline (straggler / slow storage in a real deployment)
+the deterministic generator recomputes it inline, so the step never
+stalls behind one slow host.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class DataPipeline:
+    def __init__(self, batch_fn, start_step: int = 0, depth: int = 2,
+                 timeout_s: float = 30.0):
+        self._fn = batch_fn
+        self._depth = depth
+        self._timeout = timeout_s
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._next = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._next
+        while not self._stop.is_set():
+            try:
+                batch = self._fn(step)
+            except Exception:           # pragma: no cover - defensive
+                break
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.5)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def get(self, step: int):
+        """The batch for ``step``; recomputes deterministically on timeout
+        or sequence mismatch (elastic restart)."""
+        try:
+            got_step, batch = self._q.get(timeout=self._timeout)
+            if got_step == step:
+                return batch
+        except queue.Empty:
+            pass
+        return self._fn(step)           # straggler fallback: recompute
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,84 @@
+"""Fused column-gather back-projection kernel: ``O = b @ Q[:, idx]^T``.
+
+Trion / DCT-AdamW back-project the low-rank factor ``b (m, r)`` through the
+selected DCT columns: ``O = b @ Q_r^T`` where ``Q_r^T = Q^T[idx, :] (r, n)``
+is a *row* gather of the transposed shared basis. This kernel never
+materializes the gathered matrix in HBM: the selected rows are gathered
+VMEM->VMEM from a resident column stripe of ``Q^T``, driven by the
+scalar-prefetched index vector.
+
+Grid ``(nj, ni)`` — ``j`` outermost so the ``(n, bn)`` stripe of ``Q^T`` and
+its gathered ``(r, bn)`` scratch are built once per column block and reused
+across all row blocks ``i``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (512, 256)  # (bm rows of b, bn output columns)
+
+
+def _kernel(idx_ref, b_ref, qt_ref, out_ref, gather_ref, *, r: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _build_gather():
+        def body(k, _):
+            row = idx_ref[k]
+            gather_ref[pl.ds(k, 1), :] = qt_ref[pl.ds(row, 1), :]
+            return ()
+
+        jax.lax.fori_loop(0, r, body, ())
+
+    out_ref[...] = jnp.dot(
+        b_ref[...].astype(jnp.float32),
+        gather_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def colgather_matmul(
+    b: jax.Array,
+    qt: jax.Array,
+    idx: jax.Array,
+    *,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """``O[m, n] = b[m, r] @ qt[idx, :][r, n]``; ``qt`` is ``Q^T`` (n, n),
+    ``idx`` (r,) int32. Output dtype defaults to ``b.dtype``."""
+    m, r = b.shape
+    n = qt.shape[1]
+    assert qt.shape[0] == n and idx.shape == (r,), (b.shape, qt.shape, idx.shape)
+    out_dtype = out_dtype or b.dtype
+    bm, bn = block
+    mp, np_ = (-m % bm), (-n % bn)
+    bp = jnp.pad(b, ((0, mp), (0, 0))) if mp else b
+    qtp = jnp.pad(qt, ((0, 0), (0, np_))) if np_ else qt
+    mm, nn = m + mp, n + np_
+    ni, nj = mm // bm, nn // bn
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nj, ni),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda j, i, idx_ref: (i, 0)),
+            pl.BlockSpec((qt.shape[0], bn), lambda j, i, idx_ref: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i, idx_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((r, bn), qt.dtype)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, r=r),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), bp, qtp)
+    return out[:m, :n]

@@ -1,0 +1,98 @@
+"""Fused DCT-projection kernel: ``S = G @ Q`` + per-column squared norms.
+
+The TPU-native replacement for the paper's Makhoul FFT fast path (DESIGN.md
+§2): one MXU-tiled matmul pass over ``G`` that simultaneously accumulates the
+column ranking statistic ``norms[j] = sum_i S[i, j]^2``, so the dynamic column
+selection needs no second read of ``S`` from HBM.
+
+Grid layout ``(nj, ni, nk)`` — ``j`` (output column blocks) outermost so the
+``norms`` block for a given ``j`` stays resident in VMEM across the whole
+``(i, k)`` sweep; ``k`` innermost for the standard accumulator pattern.
+
+Block shapes are multiples of the (8, 128) fp32 tile; the default 256^3 keeps
+the working set (G + Q + S tiles + fp32 acc + norms) around 1 MB of VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (256, 256, 256)  # (bm, bn, bk)
+
+
+def _kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref, *, nk: int, out_dtype):
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        g_ref[...].astype(jnp.float32),
+        q_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        s_ref[...] = acc.astype(out_dtype)
+        col = jnp.sum(acc * acc, axis=0, keepdims=True)
+
+        @pl.when(i == 0)
+        def _first():
+            norms_ref[...] = col
+
+        @pl.when(i > 0)
+        def _rest():
+            norms_ref[...] += col
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def dct_project(
+    g: jax.Array,
+    q: jax.Array,
+    *,
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+    out_dtype=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns ``(S, norms)``: ``S = G @ Q`` and fp32 squared-l2 column norms.
+
+    ``g``: (m, n); ``q``: (n, n). Arbitrary shapes are zero-padded up to block
+    multiples (padded columns yield norm 0 and are sliced away).
+    """
+    m, n = g.shape
+    assert q.shape == (n, n), (g.shape, q.shape)
+    out_dtype = out_dtype or g.dtype
+    bm, bn, bk = block
+    mp, np_, kp = (-m % bm), (-n % bn), (-n % bk)
+    gp = jnp.pad(g, ((0, mp), (0, kp))) if mp or kp else g
+    qp = jnp.pad(q, ((0, kp), (0, np_))) if kp or np_ else q
+    mm, nn, kk = m + mp, n + np_, n + kp
+    ni, nj, nk = mm // bm, nn // bn, kk // bk
+
+    s, norms = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, out_dtype=out_dtype),
+        grid=(nj, ni, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda j, i, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda j, i, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i, k: (i, j)),
+            pl.BlockSpec((1, bn), lambda j, i, k: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, nn), out_dtype),
+            jax.ShapeDtypeStruct((1, nn), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(gp, qp)
+    return s[:m, :n], norms[0, :n]

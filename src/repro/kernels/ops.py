@@ -1,0 +1,52 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware (`repro.kernels.ops.ON_TPU`).
+"""
+from __future__ import annotations
+
+import jax
+
+from .colgather_matmul import colgather_matmul
+from .dct_project import dct_project
+from .flash_attention import flash_attention
+from .newton_schulz import newton_schulz_pallas, ns_iteration
+from .quant_ef import dequant_add_ef, quantize_ef
+
+ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not ON_TPU
+
+
+def dct_project_op(g, q, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return dct_project(g, q, **kw)
+
+
+def colgather_matmul_op(b, qt, idx, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return colgather_matmul(b, qt, idx, **kw)
+
+
+def newton_schulz_op(x, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return newton_schulz_pallas(x, **kw)
+
+
+def ns_iteration_op(x, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return ns_iteration(x, **kw)
+
+
+def flash_attention_op(q, k, v, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return flash_attention(q, k, v, **kw)
+
+
+def quantize_ef_op(x, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return quantize_ef(x, **kw)
+
+
+def dequant_add_ef_op(g, q, scale, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return dequant_add_ef(g, q, scale, **kw)

@@ -1,0 +1,86 @@
+"""Bandwidth-bound int8 error-feedback kernels.
+
+Two fused passes used by DCT-AdamW's quantized EF (paper §2.4):
+  * ``quantize_ef``     — residual (m, n) fp -> (int8 payload, per-row fp32
+    scale) in a single HBM read + int8 write (4x HBM write reduction vs fp32).
+  * ``dequant_add_ef``  — ``G + q * scale`` fused so the dequantized fp32 EF
+    buffer never exists in HBM.
+
+Rows are processed in full width per grid step so the per-row amax reduction
+and the scaling stay in registers/VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256  # rows per grid step
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def _dequant_add_kernel(g_ref, q_ref, scale_ref, out_ref):
+    out_ref[...] = (
+        g_ref[...].astype(jnp.float32)
+        + q_ref[...].astype(jnp.float32) * scale_ref[...]
+    ).astype(out_ref.dtype)
+
+
+def _pad_rows(x, bm):
+    pad = -x.shape[0] % bm
+    return (jnp.pad(x, ((0, pad), (0, 0))) if pad else x), x.shape[0] + pad
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def quantize_ef(x: jax.Array, *, bm: int = DEFAULT_BM,
+                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(m, n) fp -> ((m, n) int8, (m, 1) fp32 row scales)."""
+    m, n = x.shape
+    xp, mm = _pad_rows(x, bm)
+    q, scale = pl.pallas_call(
+        _quant_kernel,
+        grid=(mm // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, n), jnp.int8),
+            jax.ShapeDtypeStruct((mm, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp)
+    return q[:m], scale[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def dequant_add_ef(g: jax.Array, q: jax.Array, scale: jax.Array, *,
+                   bm: int = DEFAULT_BM, interpret: bool = False) -> jax.Array:
+    """``G + dequant(q, scale)`` fused; output dtype follows ``G``."""
+    m, n = g.shape
+    gp, mm = _pad_rows(g, bm)
+    qp, _ = _pad_rows(q, bm)
+    sp, _ = _pad_rows(scale, bm)
+    out = pl.pallas_call(
+        _dequant_add_kernel,
+        grid=(mm // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mm, n), g.dtype),
+        interpret=interpret,
+    )(gp, qp, sp)
+    return out[:m]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.newton_schulz import NS_COEFFS
+
+
+def dct_project_ref(g: jax.Array, q: jax.Array, out_dtype=None):
+    s32 = g.astype(jnp.float32) @ q.astype(jnp.float32)
+    norms = jnp.sum(s32 * s32, axis=0)
+    return s32.astype(out_dtype or g.dtype), norms
+
+
+def colgather_matmul_ref(b: jax.Array, qt: jax.Array, idx: jax.Array,
+                         out_dtype=None):
+    gathered = qt[idx, :].astype(jnp.float32)
+    out = b.astype(jnp.float32) @ gathered
+    return out.astype(out_dtype or b.dtype)
+
+
+def ns_iteration_ref(x: jax.Array) -> jax.Array:
+    a, b, c = NS_COEFFS
+    xf = x.astype(jnp.float32)
+    gram = xf @ xf.T
+    poly = b * gram + c * gram @ gram
+    return (a * xf + poly @ xf).astype(x.dtype)
+
+
+def newton_schulz_ref(x: jax.Array, steps: int = 5, eps: float = 1e-7):
+    wide = x.shape[0] <= x.shape[1]
+    xw = (x if wide else x.T).astype(jnp.float32)
+    xw = xw / (jnp.linalg.norm(xw) + eps)
+    for _ in range(steps):
+        xw = ns_iteration_ref(xw)
+    out = xw.astype(x.dtype)
+    return out if wide else out.T
+
+
+def quantize_ef_ref(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_add_ef_ref(g: jax.Array, q: jax.Array, scale: jax.Array):
+    return (g.astype(jnp.float32) + q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None):
+    """Plain softmax attention oracle. q: (B,S,Hq,hd); k,v: (B,S,Hkv,hd)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

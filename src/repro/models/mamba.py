@@ -1,0 +1,145 @@
+"""Mamba-1 selective SSM mixer (Jamba's sequence mixer).
+
+Training uses a chunked scan: an outer `lax.scan` over sequence chunks
+carrying the (B, d_inner, state) SSM state, with a parallel
+`lax.associative_scan` inside each chunk. The (B, chunk, d_inner, state)
+intermediates exist only per-chunk, and the elementwise-diagonal recurrence
+``h' = a * h + b`` composes stably (a = exp(dt*A) <= 1).
+
+Decode is the exact single-step recurrence with a (conv_cache, ssm_state)
+cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+from .layers import dense_init
+
+
+def init_mamba(key, cfg) -> dict:
+    d, din, st = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_state
+    dtr, ck = cfg.dt_rank, cfg.mamba_conv
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": {"kernel": dense_init(ks[0], d, 2 * din, dt)},
+        "conv": {"kernel": (jax.random.normal(ks[1], (ck, din)) /
+                            math.sqrt(ck)).astype(dt),
+                 "bias": jnp.zeros((din,), dt)},
+        "x_proj": {"kernel": dense_init(ks[2], din, dtr + 2 * st, dt)},
+        "dt_proj": {"kernel": dense_init(ks[3], dtr, din, dt),
+                    "bias": jnp.full((din,), -4.6, dt)},  # softplus^-1(0.01)
+        "a_log": jnp.log(a_init),                          # (din, st) fp32
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": {"kernel": dense_init(ks[4], din, d, dt)},
+    }
+
+
+def _causal_conv(x, kernel, bias):
+    """Depthwise causal conv. x: (B, S, din); kernel: (K, din)."""
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * kernel[i][None, None, :]
+              for i in range(k))
+    return out + bias
+
+
+def _ssm_chunk(carry, inputs):
+    """One chunk. carry h0: (B, din, st); inputs per-chunk arrays."""
+    h0, = carry
+    a, bx, c = inputs           # a,bx: (B, c, din, st); c: (B, c, st)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_cum, h_in = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = a_cum * h0[:, None] + h_in                       # (B, c, din, st)
+    y = jnp.einsum("bcds,bcs->bcd", h, c)
+    return (h[:, -1],), y
+
+
+def mamba_mix(params, x, cfg, chunk: int = 128, return_state: bool = False):
+    """(B, S, d) -> (B, S, d); with ``return_state`` also the decode cache
+    {'conv': last K-1 pre-conv activations, 'ssm': final SSM state}."""
+    b, s, d = x.shape
+    din, st = cfg.mamba_d_inner, cfg.mamba_state
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+
+    xz = x @ params["in_proj"]["kernel"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, "batch", None, "tp")
+    conv_tail = xs[:, -(cfg.mamba_conv - 1):, :]          # decode conv cache
+    xs = jax.nn.silu(_causal_conv(xs, params["conv"]["kernel"],
+                                  params["conv"]["bias"]))
+
+    dbc = xs @ params["x_proj"]["kernel"]
+    dt_r, b_ssm, c_ssm = jnp.split(
+        dbc, [cfg.dt_rank, cfg.dt_rank + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"]["kernel"]
+                         + params["dt_proj"]["bias"])     # (B, S, din)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))     # (din, st)
+
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * a)                   # (B,S,din,st)
+    drive = (dtf * xs.astype(jnp.float32))[..., None] * \
+        b_ssm.astype(jnp.float32)[:, :, None, :]          # (B,S,din,st)
+
+    nc = s // chunk
+    resh = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, din, st), jnp.float32)
+    (h_last, ), ys = jax.lax.scan(
+        _ssm_chunk, (h0,),
+        (resh(decay), resh(drive), resh(c_ssm.astype(jnp.float32))))
+    y = ys.swapaxes(0, 1).reshape(b, s, din)
+    y = y + xs.astype(jnp.float32) * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, "batch", None, "tp")
+    out = y @ params["out_proj"]["kernel"]
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": h_last}
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_conv - 1, cfg.mamba_d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_state),
+                         jnp.float32),
+    }
+
+
+def mamba_step(params, x_t, cache, cfg):
+    """x_t: (B, d) one token. Returns (y_t, new_cache)."""
+    b, d = x_t.shape
+    st = cfg.mamba_state
+    xz = x_t @ params["in_proj"]["kernel"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    conv_in = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)
+    kern = params["conv"]["kernel"]                       # (K, din)
+    xs = jax.nn.silu(jnp.einsum("bkd,kd->bd", conv_in, kern)
+                     + params["conv"]["bias"])
+    new_conv = conv_in[:, 1:]
+
+    dbc = xs @ params["x_proj"]["kernel"]
+    dt_r, b_ssm, c_ssm = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + st], -1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"]["kernel"]
+                         + params["dt_proj"]["bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)  # (B,din,st)
+    drive = (dt * xs).astype(jnp.float32)[..., None] * \
+        b_ssm.astype(jnp.float32)[:, None, :]
+    h = decay * cache["ssm"] + drive
+    y = jnp.einsum("bds,bs->bd", h, c_ssm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    return y @ params["out_proj"]["kernel"], {"conv": new_conv, "ssm": h}

@@ -1,0 +1,147 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence per head (K = V = head_size):
+    state'[k, v] = w_t[k] * state[k, v] + kv_t[k] * v_t[v]
+    out_t[v]     = sum_k r_t[k] * (state[k, v] + u[k] * kv_t[k] * v_t[v])
+with the data-dependent per-channel decay ``w_t = exp(-exp(w0 + lora(x_t)))``
+(the Finch signature feature). Training runs an exact `lax.scan` over the
+sequence — the state is tiny ((B, H, K, V) = (B, d/64, 64, 64)) so the scan's
+HLO is one compact loop; the TPU-production alternative (chunked log-space
+parallel form as a Pallas kernel) is noted in DESIGN.md as future kernel
+work. Decode reuses the identical single-step update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_rwkv(key, cfg) -> dict:
+    d, hs = cfg.d_model, cfg.rwkv_head_size
+    h = cfg.rwkv_n_heads
+    lo = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 10)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "tm": {  # time mix
+            "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+            "mu_v": jnp.full((d,), 0.5, dt), "mu_g": jnp.full((d,), 0.5, dt),
+            "mu_w": jnp.full((d,), 0.5, dt),
+            "wr": {"kernel": dense_init(ks[0], d, d, dt)},
+            "wk": {"kernel": dense_init(ks[1], d, d, dt)},
+            "wv": {"kernel": dense_init(ks[2], d, d, dt)},
+            "wg": {"kernel": dense_init(ks[3], d, d, dt)},
+            "wo": {"kernel": dense_init(ks[4], d, d, dt)},
+            "decay_w0": jnp.full((d,), -2.0, jnp.float32),
+            "decay_a": dense_init(ks[5], d, lo, jnp.float32),
+            "decay_b": dense_init(ks[6], lo, d, jnp.float32, scale=0.01),
+            "bonus_u": jnp.zeros((h, hs), jnp.float32),
+            "ln_scale": jnp.ones((d,), jnp.float32),  # group-norm on heads
+        },
+        "cm": {  # channel mix
+            "mu_c": jnp.full((d,), 0.5, dt),
+            "ck": {"kernel": dense_init(ks[7], d, cfg.d_ff, dt)},
+            "cv": {"kernel": dense_init(ks[8], cfg.d_ff, d, dt)},
+            "cr": {"kernel": dense_init(ks[9], d, d, dt)},
+        },
+    }
+    return p
+
+
+def _decay(tm, xw):
+    """Data-dependent per-channel decay in (0, 1)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ tm["decay_a"]) @ tm["decay_b"]
+    return jnp.exp(-jnp.exp(tm["decay_w0"] + lora))
+
+
+def _wkv_step(state, rkvw, u):
+    """state: (B,H,K,V); r,k,v: (B,H,K|V); w: (B,H,K)."""
+    r, k, v, w = rkvw
+    kv = k[..., :, None] * v[..., None, :]               # (B,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., None] * kv)
+    new_state = w[..., None] * state + kv
+    return new_state, out
+
+
+def _heads(x, h, hs):
+    return x.reshape(*x.shape[:-1], h, hs)
+
+
+def _group_norm(x, scale, h, hs, eps=1e-5):
+    """Per-head layernorm of the wkv output. x: (..., d)."""
+    xh = x.reshape(*x.shape[:-1], h, hs).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(*x.shape) * scale).astype(x.dtype)
+
+
+def time_mix(tm, x, x_prev, state, cfg):
+    """x: (B, S, d); x_prev: (B, d) last token of the previous segment;
+    state: (B, H, K, V). Returns (out, last_x, new_state)."""
+    b, s, d = x.shape
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    xx = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+    def mixed(mu):
+        return x + mu * (xx - x)
+
+    r = _heads(mixed(tm["mu_r"]) @ tm["wr"]["kernel"], h, hs)
+    k = _heads(mixed(tm["mu_k"]) @ tm["wk"]["kernel"], h, hs)
+    v = _heads(mixed(tm["mu_v"]) @ tm["wv"]["kernel"], h, hs)
+    g = jax.nn.silu(mixed(tm["mu_g"]) @ tm["wg"]["kernel"])
+    w = _heads(_decay(tm, mixed(tm["mu_w"])), h, hs)     # (B,S,H,K)
+
+    rs, ks_, vs, ws = (t.swapaxes(0, 1).astype(jnp.float32)
+                       for t in (r, k, v, w))            # (S,B,H,·)
+    u = tm["bonus_u"]
+
+    def step(st, inp):
+        return _wkv_step(st, inp, u)
+
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32),
+                               (rs, ks_, vs, ws))
+    out = outs.swapaxes(0, 1).reshape(b, s, d)           # (B,S,d)
+    out = _group_norm(out, tm["ln_scale"], h, hs)
+    out = (out * g.astype(out.dtype)) @ tm["wo"]["kernel"]
+    return out, x[:, -1, :], state
+
+
+def channel_mix(cm, x, x_prev):
+    xx = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    xm = x + cm["mu_c"] * (xx - x)
+    k = jnp.square(jax.nn.relu(xm @ cm["ck"]["kernel"]))
+    return jax.nn.sigmoid(xm @ cm["cr"]["kernel"]) * (k @ cm["cv"]["kernel"]), \
+        x[:, -1, :]
+
+
+def time_mix_step(tm, x_t, x_prev, state, cfg):
+    """Single-token decode. x_t: (B, d)."""
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+
+    def mixed(mu):
+        return x_t + mu * (x_prev - x_t)
+
+    r = _heads(mixed(tm["mu_r"]) @ tm["wr"]["kernel"], h, hs)
+    k = _heads(mixed(tm["mu_k"]) @ tm["wk"]["kernel"], h, hs)
+    v = _heads(mixed(tm["mu_v"]) @ tm["wv"]["kernel"], h, hs)
+    g = jax.nn.silu(mixed(tm["mu_g"]) @ tm["wg"]["kernel"])
+    w = _heads(_decay(tm, mixed(tm["mu_w"])), h, hs)
+    new_state, out = _wkv_step(
+        state.astype(jnp.float32),
+        (r.astype(jnp.float32), k.astype(jnp.float32),
+         v.astype(jnp.float32), w), tm["bonus_u"])
+    out = out.reshape(x_t.shape).astype(x_t.dtype)
+    out = _group_norm(out, tm["ln_scale"], h, hs)
+    out = (out * g.astype(out.dtype)) @ tm["wo"]["kernel"]
+    return out, x_t, new_state
+
+
+def channel_mix_step(cm, x_t, x_prev):
+    xm = x_t + cm["mu_c"] * (x_prev - x_t)
+    k = jnp.square(jax.nn.relu(xm @ cm["ck"]["kernel"]))
+    return jax.nn.sigmoid(xm @ cm["cr"]["kernel"]) * (k @ cm["cv"]["kernel"]), x_t

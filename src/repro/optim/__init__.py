@@ -1,0 +1,16 @@
+"""Low-rank adaptive optimizers: the paper's Trion & DCT-AdamW plus every
+baseline it compares against (Dion, Muon, GaLore, LDAdamW, FRUGAL, FIRA,
+full-rank AdamW)."""
+from .adamw import adamw
+from .api import OPTIMIZERS, get_optimizer
+from .common import Optimizer, apply_updates
+from .dion import dion
+from .muon import muon
+from .projected_adam import dct_adamw, fira, frugal, galore, ldadamw
+from .trion import trion
+
+__all__ = [
+    "OPTIMIZERS", "get_optimizer", "Optimizer", "apply_updates",
+    "adamw", "muon", "dion", "trion", "dct_adamw", "ldadamw",
+    "galore", "frugal", "fira",
+]

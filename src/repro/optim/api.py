@@ -1,0 +1,27 @@
+"""Optimizer registry — `get_optimizer(name, lr, **kw)`."""
+from __future__ import annotations
+
+from .adamw import adamw
+from .common import Optimizer, Schedule, apply_updates
+from .dion import dion
+from .muon import muon
+from .projected_adam import dct_adamw, fira, frugal, galore, ldadamw
+from .trion import trion
+
+OPTIMIZERS = {
+    "adamw": adamw,
+    "muon": muon,
+    "dion": dion,
+    "trion": trion,
+    "dct_adamw": dct_adamw,
+    "ldadamw": ldadamw,
+    "galore": galore,
+    "frugal": frugal,
+    "fira": fira,
+}
+
+
+def get_optimizer(name: str, lr: Schedule, **kw) -> Optimizer:
+    if name not in OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}; have {sorted(OPTIMIZERS)}")
+    return OPTIMIZERS[name](lr, **kw)

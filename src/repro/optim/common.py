@@ -1,0 +1,231 @@
+"""Shared optimizer framework.
+
+Optax-style ``Optimizer(init, update)`` pairs, with a *matrix-optimizer
+harness* that routes each parameter leaf to either a low-rank matrix rule
+(the paper's subject) or a full-rank AdamW fallback (embeddings, norms,
+biases — standard GaLore/LDAdamW practice).
+
+Matrix leaves may carry leading stacked axes — ``(layers, m, n)`` or
+``(layers, experts, m, n)`` from scan-stacked models — and every rule
+broadcasts over them, which is how "per-layer column indices" fall out for
+free: the index state gets shape ``(layers, ..., r)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dct import dct2_matrix
+
+Schedule = Callable[[jax.Array], jax.Array] | float
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sched_value(lr: Schedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Leaf routing
+# ---------------------------------------------------------------------------
+_FULLRANK_NAME_HINTS = ("embed", "unembed", "lm_head", "vocab", "norm", "scale",
+                        "bias", "pos_emb", "a_log", "dt", "decay", "conv")
+
+
+def default_label_fn(path: str, leaf) -> str:
+    """'lowrank' for linear-layer matrices, 'full' otherwise (paper practice)."""
+    lname = path.lower()
+    if any(h in lname for h in _FULLRANK_NAME_HINTS):
+        return "full"
+    if leaf.ndim >= 2 and min(leaf.shape[-2:]) >= 8:
+        return "lowrank"
+    return "full"
+
+
+def path_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def labelled_tree(params, label_fn=default_label_fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, p: label_fn(path_str(kp), p), params
+    )
+
+
+# ---------------------------------------------------------------------------
+# Matrix orientation: rules are written for *right* projection of (…, m, n)
+# with n = min(m, n) (paper: "compress the smallest dimension").
+# ---------------------------------------------------------------------------
+def orient_right(x: jax.Array) -> tuple[jax.Array, bool]:
+    m, n = x.shape[-2], x.shape[-1]
+    if n <= m:
+        return x, False
+    return jnp.swapaxes(x, -1, -2), True
+
+
+def deorient(x: jax.Array, transposed: bool) -> jax.Array:
+    return jnp.swapaxes(x, -1, -2) if transposed else x
+
+
+def oriented_dims(shape) -> tuple[int, int]:
+    m, n = shape[-2], shape[-1]
+    return (m, n) if n <= m else (n, m)
+
+
+# ---------------------------------------------------------------------------
+# Adam moments (used by every Adam-family rule)
+# ---------------------------------------------------------------------------
+class AdamMoments(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+
+
+def adam_update(g, mom: AdamMoments, step, b1, b2, eps) -> tuple[jax.Array, AdamMoments]:
+    gf = g.astype(jnp.float32)
+    m = b1 * mom.m + (1.0 - b1) * gf
+    v = b2 * mom.v + (1.0 - b2) * gf * gf
+    t = step.astype(jnp.float32)
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    return mhat / (jnp.sqrt(vhat) + eps), AdamMoments(m, v)
+
+
+# ---------------------------------------------------------------------------
+# The harness
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MatrixRule:
+    """Per-matrix-leaf rule. ``ctx`` carries step, shared DCT bases, prng."""
+
+    def init(self, shape, dtype) -> Any:
+        raise NotImplementedError
+
+    def update(self, g, state, param, ctx) -> tuple[jax.Array, Any]:
+        """Returns (descent direction D, new state). Update is -lr*D - lr*wd*p
+        (decoupled weight decay applied by the harness)."""
+        raise NotImplementedError
+
+    def basis_sizes(self, shape) -> tuple[int, ...]:
+        """Which shared-basis orders this leaf needs (min oriented dim)."""
+        return (oriented_dims(shape)[1],)
+
+    needs_shared_basis: bool = False
+
+
+class FullAdamLeaf(NamedTuple):
+    mom: AdamMoments
+
+
+@dataclasses.dataclass(frozen=True)
+class Context:
+    step: jax.Array
+    bases: dict          # {"n": (n,n) DCT-II matrix} (may be empty)
+    key: jax.Array | None = None
+
+    def basis(self, n: int, dtype=jnp.float32) -> jax.Array:
+        if self.bases and str(n) in self.bases:
+            return self.bases[str(n)].astype(dtype)
+        # on-the-fly mode: the basis is recomputed inside the step — zero
+        # state memory, ~2*n^2 transcendental flops (negligible vs. matmuls)
+        return dct2_matrix(n, dtype)
+
+
+class HarnessState(NamedTuple):
+    step: jax.Array
+    key: jax.Array
+    bases: dict
+    leaves: Any          # pytree matching params
+
+
+def make_matrix_optimizer(
+    rule: MatrixRule,
+    lr: Schedule,
+    *,
+    weight_decay: float = 0.0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    label_fn=default_label_fn,
+    basis_mode: str = "stored",   # "stored" (paper) | "onthefly" (beyond-paper)
+    seed: int = 0,
+    fullrank_weight_decay: bool = True,
+) -> Optimizer:
+    """Wrap a MatrixRule into a full-model optimizer with AdamW fallback."""
+
+    def init(params):
+        labels = labelled_tree(params, label_fn)
+
+        sizes = set()
+        if rule.needs_shared_basis and basis_mode == "stored":
+            def collect(lbl, p):
+                if lbl == "lowrank":
+                    sizes.update(rule.basis_sizes(p.shape))
+            jax.tree.map(collect, labels, params)
+        bases = {str(n): dct2_matrix(n, jnp.float32) for n in sorted(sizes)}
+
+        def leaf_init(lbl, p):
+            if lbl == "lowrank":
+                return rule.init(p.shape, p.dtype)
+            # distinct buffers: donation aliases leaves one-to-one
+            return FullAdamLeaf(AdamMoments(jnp.zeros(p.shape, jnp.float32),
+                                            jnp.zeros(p.shape, jnp.float32)))
+
+        leaves = jax.tree.map(
+            leaf_init, labels, params,
+            is_leaf=lambda x: isinstance(x, str),
+        )
+        return HarnessState(
+            step=jnp.zeros((), jnp.int32),
+            key=jax.random.PRNGKey(seed),
+            bases=bases,
+            leaves=leaves,
+        )
+
+    def update(grads, state: HarnessState, params):
+        step = state.step + 1
+        lr_t = sched_value(lr, step)
+        labels = labelled_tree(params, label_fn)
+        key = jax.random.fold_in(state.key, step)
+
+        flat_lbl = jax.tree.leaves(labels, is_leaf=lambda x: isinstance(x, str))
+        leaf_ids = iter(range(len(flat_lbl)))
+
+        def leaf_update(lbl, g, s, p):
+            i = next(leaf_ids)
+            if lbl == "lowrank":
+                ctx = Context(step=step, bases=state.bases,
+                              key=jax.random.fold_in(key, i))
+                d, new_s = rule.update(g, s, p, ctx)
+                upd = -lr_t * d.astype(jnp.float32)
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+                return upd, new_s
+            direction, mom = adam_update(g, s.mom, step, b1, b2, eps)
+            upd = -lr_t * direction
+            if fullrank_weight_decay:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd, FullAdamLeaf(mom)
+
+        pairs = jax.tree.map(
+            leaf_update, labels, grads, state.leaves, params,
+            is_leaf=lambda x: isinstance(x, str),
+        )
+        # unzip the (update, state) pairs
+        updates = jax.tree.map(lambda _, pr: pr[0], labels, pairs,
+                               is_leaf=lambda x: isinstance(x, str))
+        leaves = jax.tree.map(lambda _, pr: pr[1], labels, pairs,
+                              is_leaf=lambda x: isinstance(x, str))
+        return updates, HarnessState(step=step, key=state.key,
+                                     bases=state.bases, leaves=leaves)
+
+    return Optimizer(init=init, update=update)

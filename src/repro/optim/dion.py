@@ -1,0 +1,74 @@
+"""Dion baseline (Ahn et al., 2025): low-rank orthonormal updates via
+amortized Power-Iteration + QR (the method Trion replaces).
+
+Per 2D leaf (oriented, C <= R):
+    B_t = M_{t-1} + G_t
+    P_t = QR(B_t @ Q_{t-1}).Q           (power-iteration step, R x r)
+    R_t = B_t^T P_t                      (C x r)
+    M_t = B_t - (1-mu) P_t R_t^T         (error feedback)
+    Q_t = column-normalize(R_t)          (next iteration's basis)
+    O_t = P_t Q_t^T
+    theta <- (1 - lr*wd) theta - lr * max(1, sqrt(R/C)) * O_t
+
+State per leaf: momentum M *plus* a per-layer projection matrix Q (C x r) —
+exactly the extra memory (and rank-dependent QR runtime) the paper removes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import MatrixRule, Optimizer, Schedule, deorient, make_matrix_optimizer, orient_right
+
+
+class DionLeaf(NamedTuple):
+    m: jax.Array  # full-size momentum
+    q: jax.Array  # per-layer projection basis (C, r) — Dion's memory cost
+
+
+@dataclasses.dataclass(frozen=True)
+class DionRule(MatrixRule):
+    rank: int = 128
+    mu: float = 0.95
+    eps: float = 1e-8
+    needs_shared_basis: bool = False
+
+    def init(self, shape, dtype):
+        *batch, m, n = shape
+        rows, cols = (m, n) if n <= m else (n, m)
+        r = min(self.rank, cols)
+        eye = jnp.eye(cols, r, dtype=jnp.float32)
+        return DionLeaf(
+            m=jnp.zeros(shape, jnp.float32),
+            q=jnp.broadcast_to(eye, (*batch, cols, r)),
+        )
+
+    def update(self, g, state, param, ctx):
+        gf, transposed = orient_right(g.astype(jnp.float32))
+        mf, _ = orient_right(state.m)
+        rows, cols = gf.shape[-2], gf.shape[-1]
+
+        b_full = mf + gf
+        z = jnp.einsum("...mc,...cr->...mr", b_full, state.q)
+        p, _ = jnp.linalg.qr(z)                              # R x r orthonormal
+        r_t = jnp.einsum("...mc,...mr->...cr", b_full, p)
+        new_m = b_full - (1.0 - self.mu) * jnp.einsum(
+            "...mr,...cr->...mc", p, r_t)
+        col_norm = jnp.linalg.norm(r_t, axis=-2, keepdims=True)
+        q_t = r_t / (col_norm + self.eps)
+        out = jnp.einsum("...mr,...cr->...mc", p, q_t)       # O_t
+        scale = max(1.0, (rows / cols) ** 0.5)
+        d = deorient(scale * out, transposed)
+        return d, DionLeaf(m=deorient(new_m, transposed), q=q_t)
+
+
+def dion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
+         weight_decay: float = 0.01, label_fn=None, **adam_kw) -> Optimizer:
+    rule = DionRule(rank=rank, mu=mu)
+    kw = dict(weight_decay=weight_decay, **adam_kw)
+    if label_fn is not None:
+        kw["label_fn"] = label_fn
+    return make_matrix_optimizer(rule, lr, **kw)

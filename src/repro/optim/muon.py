@@ -1,0 +1,49 @@
+"""Muon baseline (Jordan et al., 2024): orthogonalized momentum via
+Newton-Schulz on the *full-size* matrix — the compute/communication cost
+Trion's low-rank NS avoids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.newton_schulz import newton_schulz
+
+from .common import MatrixRule, Optimizer, Schedule, make_matrix_optimizer
+
+
+class MuonLeaf(NamedTuple):
+    m: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MuonRule(MatrixRule):
+    mu: float = 0.95
+    ns_steps: int = 5
+    nesterov: bool = True
+    needs_shared_basis: bool = False
+
+    def init(self, shape, dtype):
+        return MuonLeaf(m=jnp.zeros(shape, jnp.float32))
+
+    def update(self, g, state, param, ctx):
+        gf = g.astype(jnp.float32)
+        new_m = self.mu * state.m + gf
+        ns_in = gf + self.mu * new_m if self.nesterov else new_m
+        o = newton_schulz(ns_in, steps=self.ns_steps)
+        rows, cols = sorted(g.shape[-2:], reverse=True)
+        scale = max(1.0, (rows / cols) ** 0.5)
+        return scale * o, MuonLeaf(m=new_m)
+
+
+def muon(lr: Schedule, *, mu: float = 0.95, weight_decay: float = 0.01,
+         ns_steps: int = 5, nesterov: bool = True, label_fn=None,
+         **adam_kw) -> Optimizer:
+    rule = MuonRule(mu=mu, ns_steps=ns_steps, nesterov=nesterov)
+    kw = dict(weight_decay=weight_decay, **adam_kw)
+    if label_fn is not None:
+        kw["label_fn"] = label_fn
+    return make_matrix_optimizer(rule, lr, **kw)

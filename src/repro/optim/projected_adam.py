@@ -1,0 +1,240 @@
+"""Generic low-rank projected AdamW — one rule, five optimizers.
+
+This is the plug point the paper argues for: the projector (DCT dynamic
+column selection vs SVD vs block power iteration vs random/randperm) is a
+swappable component inside an otherwise identical low-rank Adam(W):
+
+  optimizer   projector   T_u    rotate   residual handling
+  ---------   ---------   ----   ------   -----------------
+  DCT-AdamW   dct         any    yes      error feedback (fp32 or int8)
+  LDAdamW     power       1      yes      error feedback (optional)
+  GaLore      svd         200    no       discarded
+  FRUGAL      svd/dct/..  200    no       SignSGD on the state-free part
+  FIRA        svd/dct     200    no       norm-scaled pass-through
+
+Per 2D leaf (oriented so the projected dim is last, size n <= m):
+    G_t  = grad (+ EF buffer)
+    refresh (every T_u steps): new indices/basis from G_t; rotation
+        R = Q_prev^T Q_crt applied to m, v (|.| on v) — for index-based
+        projectors R is a 0/1 partial permutation (DESIGN.md §1)
+    g_t  = G_t @ Q_crt                      (m x r)
+    Xi   = G_t - g_t Q_crt^T                (residual; see table)
+    m, v = Adam moments on g_t; u = mhat / (sqrt(vhat) + eps)
+    D    = u @ Q_crt^T (+ residual term)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.error_feedback import (
+    QuantizedBuffer,
+    dequantize_q8,
+    quantize_q8,
+    zeros_q8,
+)
+from repro.core.projectors import Projector, rotation_matrix
+
+from .common import (
+    MatrixRule,
+    Optimizer,
+    Schedule,
+    deorient,
+    make_matrix_optimizer,
+    orient_right,
+    oriented_dims,
+)
+
+
+class ProjAdamLeaf(NamedTuple):
+    m: jax.Array            # (..., rows, r) first moment, low-rank
+    v: jax.Array            # (..., rows, r) second moment, low-rank
+    proj: Any               # projector state (indices or basis)
+    ef: Any                 # None | fp32 array | QuantizedBuffer
+    inner_step: jax.Array   # steps since last subspace refresh (bias corr.)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectedAdamRule(MatrixRule):
+    rank: int = 128
+    projector: str = "dct"
+    update_interval: int = 1          # T_u
+    rotate: bool = True
+    residual: str = "ef"              # "ef" | "discard" | "sign" | "fira"
+    ef_dtype: str = "q8"              # "fp32" | "q8" (when residual == "ef")
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    ranking_norm: str = "l2"
+    exact_rotation_matmul: bool = False   # paper-literal R via matmul
+    needs_shared_basis: bool = True       # harness stores DCT bases if needed
+
+    def _proj(self):
+        return Projector(kind=self.projector, r=self.rank, norm=self.ranking_norm)
+
+    def init(self, shape, dtype):
+        *batch, _, _ = shape
+        rows, cols = oriented_dims(shape)
+        r = min(self.rank, cols)
+        p = self._proj()
+        # m and v must be distinct buffers (donation aliases leaves 1:1)
+        mz = jnp.zeros((*batch, rows, r), jnp.float32)
+        vz = jnp.zeros((*batch, rows, r), jnp.float32)
+        if self.residual == "ef":
+            orient_shape = (*batch, rows, cols)
+            ef = (zeros_q8(orient_shape) if self.ef_dtype == "q8"
+                  else jnp.zeros(orient_shape, jnp.float32))
+        else:
+            ef = None
+        return ProjAdamLeaf(m=mz, v=vz, proj=p.init((*batch, rows, cols)),
+                            ef=ef, inner_step=jnp.zeros((), jnp.int32))
+
+    def update(self, g, state, param, ctx):
+        p = self._proj()
+        gf, transposed = orient_right(g.astype(jnp.float32))
+        rows, cols = gf.shape[-2], gf.shape[-1]
+        r = min(self.rank, cols)
+        q = ctx.basis(cols, jnp.float32) if p.needs_shared_basis else None
+
+        if state.ef is not None:
+            ef_val = (dequantize_q8(state.ef) if isinstance(state.ef, QuantizedBuffer)
+                      else state.ef)
+            gf = gf + ef_val
+
+        def refresh(_):
+            new_proj = p.update(gf, state.proj, shared_q=q, key=ctx.key)
+            if not self.rotate:
+                return (new_proj,)
+            rot = rotation_matrix(state.proj, new_proj, p, cols, shared_q=q,
+                                  exact_matmul=self.exact_rotation_matmul)
+            return new_proj, rot
+
+        def keep(_):
+            if not self.rotate:
+                return (state.proj,)
+            eye = jnp.eye(r, dtype=jnp.float32)
+            eye = jnp.broadcast_to(eye, (*gf.shape[:-2], r, r))
+            return state.proj, eye
+
+        if self.update_interval == 1:
+            out = refresh(None)
+        else:
+            do_refresh = (ctx.step % self.update_interval == 1) | (ctx.step == 1)
+            out = jax.lax.cond(do_refresh, refresh, keep, None)
+        proj_state = out[0]
+
+        g_low = p.project(gf, proj_state, shared_q=q)           # (..., rows, r)
+
+        if self.rotate:
+            rot = out[1]
+            m_prev = jnp.einsum("...mr,...rs->...ms", state.m, rot)
+            v_prev = jnp.abs(jnp.einsum("...mr,...rs->...ms", state.v, rot))
+        else:
+            m_prev, v_prev = state.m, state.v
+        inner = state.inner_step + 1
+
+        m = self.b1 * m_prev + (1.0 - self.b1) * g_low
+        v = self.b2 * v_prev + (1.0 - self.b2) * g_low * g_low
+        t = inner.astype(jnp.float32)
+        mhat = m / (1.0 - self.b1**t)
+        vhat = v / (1.0 - self.b2**t)
+        u_low = mhat / (jnp.sqrt(vhat) + self.eps)
+
+        d = p.backproject(u_low, proj_state, shared_q=q, n=cols)
+
+        new_ef = state.ef
+        if self.residual != "discard":
+            resid = gf - p.backproject(g_low, proj_state, shared_q=q, n=cols)
+            if self.residual == "ef":
+                new_ef = (quantize_q8(resid) if self.ef_dtype == "q8" else resid)
+            elif self.residual == "sign":
+                d = d + jnp.sign(resid)                         # FRUGAL state-free
+            elif self.residual == "fira":
+                phi = (jnp.linalg.norm(u_low, axis=(-2, -1), keepdims=True)
+                       / (jnp.linalg.norm(g_low, axis=(-2, -1), keepdims=True)
+                          + self.eps))
+                d = d + phi * resid                             # FIRA scaling
+
+        d = deorient(d, transposed)
+        return d, ProjAdamLeaf(m=m, v=v, proj=proj_state, ef=new_ef,
+                               inner_step=inner)
+
+
+def _build(lr, rule_kw, harness_kw) -> Optimizer:
+    rule_kw.setdefault("needs_shared_basis", rule_kw.get("projector") == "dct")
+    rule = ProjectedAdamRule(**rule_kw)
+    return make_matrix_optimizer(rule, lr, b1=rule.b1, b2=rule.b2, eps=rule.eps,
+                                 **harness_kw)
+
+
+def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
+              weight_decay: float = 0.01, error_feedback: bool = True,
+              ef_dtype: str = "q8", b1: float = 0.9, b2: float = 0.999,
+              eps: float = 1e-8, exact_rotation_matmul: bool = False,
+              basis_mode: str = "stored", label_fn=None) -> Optimizer:
+    """The paper's DCT-AdamW (Algorithm 2)."""
+    hk = dict(weight_decay=weight_decay, basis_mode=basis_mode)
+    if label_fn is not None:
+        hk["label_fn"] = label_fn
+    return _build(lr, dict(rank=rank, projector="dct",
+                           update_interval=update_interval, rotate=True,
+                           residual="ef" if error_feedback else "discard",
+                           ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps,
+                           exact_rotation_matmul=exact_rotation_matmul), hk)
+
+
+def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
+            error_feedback: bool = True, b1: float = 0.9, b2: float = 0.999,
+            eps: float = 1e-8, label_fn=None) -> Optimizer:
+    """LDAdamW baseline: block power iteration, per-step subspace, rotation
+    via real r x r matmul of two stored projection matrices."""
+    hk = dict(weight_decay=weight_decay)
+    if label_fn is not None:
+        hk["label_fn"] = label_fn
+    return _build(lr, dict(rank=rank, projector="power", update_interval=1,
+                           rotate=True,
+                           residual="ef" if error_feedback else "discard",
+                           ef_dtype="fp32", b1=b1, b2=b2, eps=eps), hk)
+
+
+def galore(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
+           weight_decay: float = 0.01, projector: str = "svd",
+           b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+           label_fn=None) -> Optimizer:
+    """GaLore baseline: SVD every T_u steps, residual discarded, no rotation."""
+    hk = dict(weight_decay=weight_decay)
+    if label_fn is not None:
+        hk["label_fn"] = label_fn
+    return _build(lr, dict(rank=rank, projector=projector,
+                           update_interval=update_interval, rotate=False,
+                           residual="discard", b1=b1, b2=b2, eps=eps), hk)
+
+
+def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
+           weight_decay: float = 0.01, projector: str = "svd",
+           b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+           label_fn=None) -> Optimizer:
+    """FRUGAL baseline: state-full low-rank AdamW + state-free SignSGD on the
+    residual. ``projector`` in {svd, dct, random, randperm} (paper Table 6)."""
+    hk = dict(weight_decay=weight_decay)
+    if label_fn is not None:
+        hk["label_fn"] = label_fn
+    return _build(lr, dict(rank=rank, projector=projector,
+                           update_interval=update_interval, rotate=False,
+                           residual="sign", b1=b1, b2=b2, eps=eps), hk)
+
+
+def fira(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
+         weight_decay: float = 0.01, projector: str = "svd",
+         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         label_fn=None) -> Optimizer:
+    """FIRA baseline: low-rank AdamW + norm-scaled full-rank residual."""
+    hk = dict(weight_decay=weight_decay)
+    if label_fn is not None:
+        hk["label_fn"] = label_fn
+    return _build(lr, dict(rank=rank, projector=projector,
+                           update_interval=update_interval, rotate=False,
+                           residual="fira", b1=b1, b2=b2, eps=eps), hk)

@@ -1,0 +1,85 @@
+"""Trion (paper Algorithm 1): Dion with the Power-Iteration/QR replaced by
+DCT dynamic column selection, and Newton-Schulz run on the *low-rank*
+momentum factor.
+
+Per 2D leaf (oriented so the projected dim is last, size C <= R):
+    B_t = M_{t-1} + G_t
+    S_t = B_t @ D_C                      (DCT-II similarity; matmul or Makhoul)
+    i_t = top-r columns of S_t by l1/l2 norm
+    b_t = S_t[:, i_t]                    (low-rank momentum, free extraction)
+    M_t = B_t - (1-mu) * b_t Q_t^T       (error feedback)
+    o_t = NewtonSchulz(b_t)              (r-sized Gram matrices!)
+    O_t = o_t Q_t^T
+    theta <- (1 - lr*wd) theta - lr * max(1, sqrt(R/C)) * O_t
+
+State per leaf: the momentum M (same shape as the param) — *no* per-layer
+projection matrix (the paper's memory win vs Dion); indices are recomputed
+each step and never persisted.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from typing import NamedTuple
+
+from repro.core.dct import makhoul_dct2
+from repro.core.newton_schulz import newton_schulz
+from repro.core.selection import back_project, dynamic_column_selection
+
+from .common import MatrixRule, Optimizer, Schedule, deorient, make_matrix_optimizer, orient_right
+
+
+class TrionLeaf(NamedTuple):
+    m: jax.Array  # full-size momentum
+
+
+@dataclasses.dataclass(frozen=True)
+class TrionRule(MatrixRule):
+    rank: int = 128
+    mu: float = 0.95
+    ns_steps: int = 5
+    ranking_norm: str = "l2"
+    dct_method: str = "matmul"       # "matmul" (TPU/MXU) | "fft" (Makhoul)
+    momentum_dtype: str = "float32"
+    needs_shared_basis: bool = True
+
+    def init(self, shape, dtype):
+        return TrionLeaf(m=jnp.zeros(shape, jnp.dtype(self.momentum_dtype)))
+
+    def update(self, g, state, param, ctx):
+        gf, transposed = orient_right(g.astype(jnp.float32))
+        mf, _ = orient_right(state.m.astype(jnp.float32))
+        rows, cols = gf.shape[-2], gf.shape[-1]
+        r = min(self.rank, cols)
+
+        b_full = mf + gf                                   # B_t
+        q = ctx.basis(cols, jnp.float32)
+        if self.dct_method == "fft":
+            s = makhoul_dct2(b_full)
+        else:
+            s = b_full @ q
+        idx, b = dynamic_column_selection(s, r, ord=self.ranking_norm)
+        low_rank_part = back_project(b, q, idx)            # b_t Q_t^T
+        new_m = b_full - (1.0 - self.mu) * low_rank_part   # Alg.1 line 10
+        o = newton_schulz(b, steps=self.ns_steps)          # on R x r factor
+        out = back_project(o, q, idx)                      # O_t
+        scale = max(1.0, (rows / cols) ** 0.5)
+        d = deorient(scale * out, transposed)
+        new_m = deorient(new_m, transposed).astype(state.m.dtype)
+        return d, TrionLeaf(m=new_m)
+
+
+def trion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
+          weight_decay: float = 0.01, ns_steps: int = 5,
+          ranking_norm: str = "l2", dct_method: str = "matmul",
+          momentum_dtype: str = "float32", basis_mode: str = "stored",
+          label_fn=None, **adam_kw) -> Optimizer:
+    rule = TrionRule(rank=rank, mu=mu, ns_steps=ns_steps,
+                     ranking_norm=ranking_norm, dct_method=dct_method,
+                     momentum_dtype=momentum_dtype)
+    kw = dict(weight_decay=weight_decay, basis_mode=basis_mode, **adam_kw)
+    if label_fn is not None:
+        kw["label_fn"] = label_fn
+    return make_matrix_optimizer(rule, lr, **kw)

@@ -1,0 +1,4 @@
+from .analysis import RooflineReport, analyze_compiled, hw
+from .hlo_parse import collective_bytes
+
+__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes", "hw"]

@@ -1,0 +1,90 @@
+"""Parse collective ops + payload bytes out of (S)HLO module text.
+
+cost_analysis() has no collective-bytes entry, so we scan the compiled
+module text for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instructions and sum their payload sizes (brief:
+ROOFLINE ANALYSIS). Works on both ``lowered.as_text()`` (StableHLO) and
+``compiled.as_text()`` (post-SPMD HLO); the roofline uses the compiled
+text — that is the per-device program with the real collective schedule.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# result shape(s) then the op name, e.g.
+#   %all-reduce.5 = f32[128,256]{1,0} all-reduce(...)
+#   ROOT %tup = (f32[8]{0}, f32[4]{0}) all-reduce(...)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(pred|[a-z]+\d+[a-z0-9]*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """{op_kind: {'count': int, 'bytes': result-payload bytes}, ...} plus a
+    '_total' entry. '-done' halves of async pairs are skipped (their
+    '-start' carries the payload)."""
+    out: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes_txt, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        b = _shape_bytes(shapes_txt)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    total = {"count": sum(v["count"] for v in out.values()),
+             "bytes": sum(v["bytes"] for v in out.values())}
+    result = dict(out)
+    result["_total"] = total
+    return result
+
+
+def wire_bytes(stats: dict, n_devices_hint: int = 16) -> float:
+    """Approximate bytes a single device actually moves over links.
+
+    Ring algorithms: all-gather / reduce-scatter move (n-1)/n of the result
+    ~= 1x result bytes; all-reduce = reduce-scatter + all-gather ~= 2x its
+    payload; all-to-all moves (n-1)/n; collective-permute 1x.
+    """
+    f = (n_devices_hint - 1) / max(n_devices_hint, 1)
+    factors = {
+        "all-gather": f,
+        "reduce-scatter": f,
+        "all-reduce": 2.0 * f,
+        "all-to-all": f,
+        "ragged-all-to-all": f,
+        "collective-permute": 1.0,
+    }
+    total = 0.0
+    for kind, v in stats.items():
+        if kind.startswith("_"):
+            continue
+        total += factors.get(kind, 1.0) * v["bytes"]
+    return total

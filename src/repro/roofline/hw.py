@@ -1,0 +1,5 @@
+"""TPU v5e hardware constants (brief: ROOFLINE ANALYSIS)."""
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+HBM_BYTES = 16 * 1024**3       # 16 GiB per chip

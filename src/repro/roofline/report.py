@@ -1,0 +1,58 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run JSON records.
+
+  PYTHONPATH=src python -m repro.roofline.report results/dryrun/*.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(paths) -> list[dict]:
+    recs = []
+    for p in paths:
+        data = json.load(open(p))
+        recs.extend(data if isinstance(data, list) else [data])
+    return recs
+
+
+def fmt_table(recs: list[dict], mesh: str | None = None) -> str:
+    rows = []
+    head = ("| arch | shape | comp s | mem s | coll s | dominant | "
+            "MFU@roof | useful | step bound s | args GB | temp GB |")
+    sep = "|" + "---|" * 11
+    rows.append(head)
+    rows.append(sep)
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skip | — | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR | — | — | — | — | — |")
+            continue
+        rows.append(
+            "| {arch} | {shape} | {c:.3f} | {m:.3f} | {k:.3f} | {dom} | "
+            "{mfu:.3f} | {useful:.2f} | {step:.3f} | {args:.1f} | "
+            "{temp:.1f} |".format(
+                arch=r["arch"], shape=r["shape"], c=r["compute_s"],
+                m=r["memory_s"], k=r["collective_s"], dom=r["dominant"],
+                mfu=r["mfu"], useful=r["useful_ratio"], step=r["step_s"],
+                args=r["arg_bytes"] / 2**30, temp=r["temp_bytes"] / 2**30))
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    paths = argv or sys.argv[1:]
+    recs = load(paths)
+    meshes = sorted({r.get("mesh") for r in recs})
+    for m in meshes:
+        print(f"\n### mesh {m}\n")
+        print(fmt_table(recs, m))
+
+
+if __name__ == "__main__":
+    main()

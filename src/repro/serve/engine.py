@@ -1,0 +1,69 @@
+"""Batched serving: prefill + jit'd decode steps over a shared KV cache.
+
+``make_serve_step`` is the function the decode-shape dry-run cells lower:
+one new token for every sequence in the batch against a ``seq_len``-sized
+cache (exactly the brief's ``decode_*`` contract). ``ServeEngine`` is the
+runnable wrapper used by examples/serve_batch.py: greedy or temperature
+sampling, synchronized positions, eos early-exit mask.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg):
+    """(params, cache, token (B,), pos ()) -> (logits (B,V), cache)."""
+
+    def serve_step(params, cache, token, pos):
+        return T.decode_step(params, cache, token, pos, cfg)
+
+    return serve_step
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_len: int = 2048,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self._step = jax.jit(make_serve_step(cfg))
+        self._key = jax.random.PRNGKey(seed)
+
+    def _sample(self, logits):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch: dict, *, max_new_tokens: int = 32,
+                 eos_id: int | None = None):
+        """batch: {'tokens': (B, S) prompt, + modality stubs}. Returns
+        (B, <=max_new_tokens) int32 generations (greedy/temperature)."""
+        prompt = batch["tokens"]
+        b, s = prompt.shape
+        last_logits, cache, n = T.prefill(self.params, batch, self.cfg,
+                                          max_len=self.max_len)
+        token = self._sample(last_logits)
+        out = [token]
+        done = jnp.zeros((b,), bool) if eos_id is not None else None
+        pos = s
+        for _ in range(max_new_tokens - 1):
+            logits, cache = self._step(self.params, cache, token,
+                                       jnp.int32(pos))
+            token = self._sample(logits)
+            if eos_id is not None:
+                done = done | (token == eos_id)
+                token = jnp.where(done, eos_id, token)
+                if bool(done.all()):
+                    out.append(token)
+                    break
+            out.append(token)
+            pos += 1
+        return jnp.stack(out, axis=1)

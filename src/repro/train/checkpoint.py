@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, async, mesh-agnostic.
+
+Format: one directory per step containing a flat .npz of every leaf
+(path-keyed) plus a manifest. Writes go to ``<dir>.tmp`` then os.rename —
+a crash mid-write can never corrupt the latest checkpoint. Saves are
+offloaded to a writer thread (``async_save``) so the train loop never
+blocks on storage; ``wait()`` drains before exit/preemption.
+
+Checkpoints are saved *unsharded-logical* (fully addressable host arrays):
+restore takes the target mesh/shardings and uses jax.device_put with the
+new NamedShardings, so the data-parallel width may change between runs
+(elastic restart — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(tree, flat: dict[str, np.ndarray]):
+    def rebuild(kp, leaf):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        arr = flat[key]
+        return jnp.asarray(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
+                           else arr)
+    return jax.tree_util.tree_map_with_path(rebuild, tree)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: threading.Thread | None = None
+
+    # -- discovery ----------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "OK")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: dict | None = None):
+        """Synchronous atomic save."""
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "state.npz"), **_flatten(state))
+        manifest = {"step": int(step), **(extra or {})}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "OK"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)           # atomic publish
+        self._gc()
+
+    def async_save(self, step: int, state: Any, extra: dict | None = None):
+        """Device->host copy happens on the caller thread (cheap, required
+        for consistency); disk IO on a background thread."""
+        flat = _flatten(state)          # snapshot now
+        self.wait()
+
+        def _write():
+            final = os.path.join(self.dir, f"step_{step}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "state.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": int(step), **(extra or {})}, f)
+            with open(os.path.join(tmp, "OK"), "w") as f:
+                f.write("ok")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        self._pending = threading.Thread(target=_write, daemon=True)
+        self._pending.start()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        with self._lock:
+            steps = self.all_steps()
+            for s in steps[:-self.keep] if self.keep else []:
+                shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                              ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def restore(self, step: int, target: Any, shardings: Any | None = None):
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs). With ``shardings`` (pytree of NamedSharding for
+        the *current* mesh), leaves are placed sharded — the saved file is
+        mesh-agnostic, so this reshards elastically."""
+        path = os.path.join(self.dir, f"step_{step}", "state.npz")
+        flat = dict(np.load(path))
+        tree = _unflatten_into(target, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    def restore_latest(self, target: Any, shardings: Any | None = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target, shardings)

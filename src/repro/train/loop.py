@@ -1,0 +1,78 @@
+"""Training loop with checkpoint/restart, preemption handling, and elastic
+restore — the single-process core that ``launch/train.py --supervise``
+wraps with a restart supervisor for node-failure tolerance.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataPipeline
+
+from .checkpoint import CheckpointManager
+from .steps import TrainState
+
+
+class Trainer:
+    def __init__(self, *, train_step, init_state_fn, batch_fn,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 keep: int = 3, log_every: int = 10,
+                 log_fn: Callable[[str], None] = print):
+        self.train_step = train_step
+        self.init_state_fn = init_state_fn
+        self.batch_fn = batch_fn
+        self.ckpt = CheckpointManager(ckpt_dir, keep) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.log = log_fn
+        self._preempted = False
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            # preemption notice: finish the current step, checkpoint, exit
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:              # not on main thread (tests)
+            pass
+
+    def run(self, total_steps: int, resume: bool = True) -> TrainState:
+        self._install_sigterm()
+        state = self.init_state_fn()
+        start = 0
+        if resume and self.ckpt is not None:
+            step, restored = self.ckpt.restore_latest(state)
+            if step is not None:
+                state, start = restored, step
+                self.log(f"[trainer] resumed from checkpoint step {step}")
+
+        pipeline = DataPipeline(self.batch_fn, start_step=start)
+        losses = []
+        try:
+            t0 = time.perf_counter()
+            for step in range(start, total_steps):
+                batch = pipeline.get(step)
+                state, metrics = self.train_step(state, batch)
+                losses.append(metrics)
+                if (step + 1) % self.log_every == 0:
+                    loss = float(metrics["loss"])
+                    dt = (time.perf_counter() - t0) / self.log_every
+                    self.log(f"[trainer] step {step + 1} loss {loss:.4f} "
+                             f"({dt * 1e3:.0f} ms/step)")
+                    t0 = time.perf_counter()
+                if self.ckpt is not None and (
+                        (step + 1) % self.ckpt_every == 0 or self._preempted):
+                    self.ckpt.async_save(step + 1, state)
+                if self._preempted:
+                    self.log("[trainer] SIGTERM -> checkpointed, exiting")
+                    break
+        finally:
+            pipeline.close()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        self.metrics_history = losses
+        return state

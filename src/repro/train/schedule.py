@@ -1,0 +1,27 @@
+"""LR schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, s / max(warmup, 1))
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(1.0, s / max(warmup, 1))
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, lr * cos)
+    return fn

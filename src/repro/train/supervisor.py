@@ -1,0 +1,41 @@
+"""Restart supervisor: node-failure tolerance for the training driver.
+
+Runs the training entrypoint in a child process; on a non-zero exit
+(crash, OOM, killed node in a real deployment) it restarts from the latest
+checkpoint, with capped exponential backoff and a max-restart budget.
+Because checkpoints are mesh-agnostic (train/checkpoint.py), the restarted
+run may come back with a different data-parallel width (elastic).
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+
+
+def supervise(cmd: list[str], *, max_restarts: int = 10,
+              backoff_s: float = 2.0, max_backoff_s: float = 60.0,
+              log=print) -> int:
+    attempt = 0
+    while True:
+        log(f"[supervisor] launching (attempt {attempt + 1}): {' '.join(cmd)}")
+        proc = subprocess.run(cmd)
+        if proc.returncode == 0:
+            log("[supervisor] clean exit")
+            return 0
+        attempt += 1
+        if attempt > max_restarts:
+            log(f"[supervisor] giving up after {max_restarts} restarts")
+            return proc.returncode
+        delay = min(backoff_s * (2 ** (attempt - 1)), max_backoff_s)
+        log(f"[supervisor] exit code {proc.returncode}; restarting from "
+            f"latest checkpoint in {delay:.0f}s")
+        time.sleep(delay)
+
+
+def main():                             # pragma: no cover - thin CLI
+    sys.exit(supervise(sys.argv[1:]))
+
+
+if __name__ == "__main__":              # pragma: no cover
+    main()

@@ -1,0 +1,67 @@
+"""Unit tests for the DCT basis and Makhoul's FFT algorithm."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dct import (
+    dct2,
+    dct2_matrix,
+    dct3_matrix,
+    dct_basis_np,
+    makhoul_dct2,
+)
+
+SIZES = [4, 7, 16, 63, 128, 640, 1024]
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_dct3_matches_float64_oracle(n):
+    q = np.asarray(dct3_matrix(n))
+    np.testing.assert_allclose(q, dct_basis_np(n), atol=5e-7)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_dct3_orthogonal(n):
+    q = np.asarray(dct3_matrix(n), dtype=np.float64)
+    np.testing.assert_allclose(q @ q.T, np.eye(n), atol=2e-5)
+    np.testing.assert_allclose(q.T @ q, np.eye(n), atol=2e-5)
+
+
+def test_dct2_is_transpose_of_dct3():
+    np.testing.assert_array_equal(
+        np.asarray(dct2_matrix(33)), np.asarray(dct3_matrix(33)).T
+    )
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("rows", [1, 3])
+def test_makhoul_equals_matmul(n, rows):
+    rng = np.random.default_rng(n * 31 + rows)
+    x = rng.standard_normal((rows, n)).astype(np.float32)
+    s_mm = np.asarray(dct2(jnp.asarray(x), method="matmul"))
+    s_fft = np.asarray(makhoul_dct2(jnp.asarray(x)))
+    scale = np.abs(x).max() * np.sqrt(n)
+    np.testing.assert_allclose(s_fft, s_mm, atol=2e-6 * scale)
+
+
+def test_makhoul_energy_preserving():
+    # orthonormal transform preserves Frobenius norm (Parseval)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 256)).astype(np.float32)
+    s = np.asarray(makhoul_dct2(jnp.asarray(x)))
+    np.testing.assert_allclose(
+        np.linalg.norm(s, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-5
+    )
+
+
+def test_dct_bf16_roundtrip_reasonable():
+    # bf16 basis is what large archs store (DESIGN.md §7.3)
+    n = 512
+    q = np.asarray(dct3_matrix(n, dtype=jnp.bfloat16), dtype=np.float32)
+    err = np.abs(q @ q.T - np.eye(n)).max()
+    assert err < 0.1  # bf16 has ~3 decimal digits; basis still near-orthogonal
+
+
+def test_order_limit_raises():
+    with pytest.raises(ValueError):
+        dct3_matrix(40_000)

@@ -1,0 +1,81 @@
+"""Tests for Newton-Schulz orthogonalization and quantized error feedback."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.error_feedback import dequantize_q8, quantize_q8, zeros_q8
+from repro.core.newton_schulz import newton_schulz
+
+
+@pytest.mark.parametrize("shape", [(8, 8), (32, 8), (8, 32), (3, 16, 4)])
+def test_ns_singular_values_near_one(shape):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(shape).astype(np.float32)
+    y = np.asarray(newton_schulz(jnp.asarray(x), steps=10), dtype=np.float64)
+    sv = np.linalg.svd(y, compute_uv=False)
+    # NS5 converges to ~[0.7, 1.3] band quickly; 10 steps should tighten it
+    assert sv.max() < 1.35
+    assert sv.min() > 0.3
+
+
+def test_ns_matches_uv_transpose():
+    """For well-conditioned input, NS approximates U V^T of the SVD."""
+    rng = np.random.default_rng(1)
+    # construct matrix with singular values in [0.5, 1.5] (well-conditioned)
+    u, _ = np.linalg.qr(rng.standard_normal((16, 16)))
+    v, _ = np.linalg.qr(rng.standard_normal((8, 8)))
+    s = np.diag(np.linspace(0.5, 1.5, 8))
+    x = (u[:, :8] @ s @ v.T).astype(np.float32)
+    y = np.asarray(newton_schulz(jnp.asarray(x), steps=12), dtype=np.float64)
+    target = u[:, :8] @ v.T
+    # KJ's quintic trades exactness for speed: singular values land in a
+    # ~[0.7, 1.3] band, so compare up to that band, not exactly.
+    assert np.abs(y - target).max() < 0.25
+    # direction alignment: <y, target> / (|y||target|) should be ~1
+    cos = (y * target).sum() / (np.linalg.norm(y) * np.linalg.norm(target))
+    assert cos > 0.98
+
+
+def test_ns_preserves_shape_and_dtype():
+    x = jnp.ones((4, 12, 3), dtype=jnp.bfloat16)
+    y = newton_schulz(x, steps=5)
+    assert y.shape == x.shape and y.dtype == x.dtype
+
+
+def test_ns_low_rank_orientation():
+    """Trion's case: tall (m, r) factor — gram matrices must be r-sized and the
+    result orthogonal-ish on the thin side."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((256, 16)).astype(np.float32)
+    y = np.asarray(newton_schulz(jnp.asarray(x), steps=10), dtype=np.float64)
+    gram = y.T @ y
+    np.testing.assert_allclose(gram, np.eye(16), atol=0.35)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 16), n=st.integers(1, 32), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-3, 1e3))
+def test_q8_roundtrip_error_bound(m, n, seed, scale):
+    x = np.random.default_rng(seed).standard_normal((m, n)).astype(np.float32) * scale
+    buf = quantize_q8(jnp.asarray(x))
+    y = np.asarray(dequantize_q8(buf))
+    # symmetric q8: |err| <= scale/2 = max|row|/254 per row
+    row_bound = np.abs(x).max(axis=-1, keepdims=True) / 254.0 + 1e-12
+    assert (np.abs(x - y) <= row_bound * 1.01).all()
+
+
+def test_q8_zeros_and_zero_rows():
+    buf = zeros_q8((4, 8))
+    assert np.asarray(dequantize_q8(buf)).sum() == 0
+    x = jnp.zeros((3, 5))
+    buf = quantize_q8(x)
+    np.testing.assert_array_equal(np.asarray(dequantize_q8(buf)), np.zeros((3, 5)))
+
+
+def test_q8_batched():
+    x = np.random.default_rng(3).standard_normal((2, 3, 4, 8)).astype(np.float32)
+    buf = quantize_q8(jnp.asarray(x))
+    assert buf.q.shape == x.shape and buf.scale.shape == (2, 3, 4, 1)
+    y = np.asarray(dequantize_q8(buf))
+    assert np.abs(x - y).max() < np.abs(x).max() / 100.0

@@ -1,0 +1,109 @@
+"""Property tests (hypothesis) for dynamic column selection — paper §4.1.
+
+Invariants under test:
+  1. Energy identity:  ||G - Q_r Q_r^T' G||_F^2 = ||G||_F^2 - sum_sel ||G q_i||^2.
+  2. Contractiveness:  top-r selection gives error <= (1 - r/n) ||G||_F^2.
+  3. Optimality:       no other column subset of the same size beats top-r (l2).
+  4. Exactness at full rank: r == n reconstructs G.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dct import dct2_matrix, dct_basis_np
+from repro.core.selection import (
+    back_project,
+    column_norms,
+    dynamic_column_selection,
+    reconstruction_error_sq,
+    select_top_r,
+)
+
+matrix_shapes = st.tuples(st.integers(2, 24), st.integers(2, 24))
+
+
+def _rand_g(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape=matrix_shapes, seed=st.integers(0, 2**31 - 1), frac=st.floats(0.1, 1.0))
+def test_energy_identity_and_contractive(shape, seed, frac):
+    m, n = shape
+    r = max(1, min(n, int(round(frac * n))))
+    g = _rand_g((m, n), seed)
+    q = np.asarray(dct2_matrix(n), dtype=np.float64)
+    s = g.astype(np.float64) @ q
+    idx = np.asarray(select_top_r(jnp.asarray(column_norms(jnp.asarray(s))), r))
+    # explicit reconstruction
+    qr = q[:, idx]
+    rec = g.astype(np.float64) @ qr @ qr.T
+    err_explicit = np.linalg.norm(g - rec) ** 2
+    err_identity = float(
+        reconstruction_error_sq(jnp.asarray(g), jnp.asarray(q, dtype=jnp.float32),
+                                jnp.asarray(idx))
+    )
+    tol = 1e-4 * max(1.0, np.linalg.norm(g) ** 2)
+    assert abs(err_explicit - err_identity) < tol
+    # contractive with factor (1 - r/n)
+    bound = (1.0 - r / n) * np.linalg.norm(g) ** 2
+    assert err_explicit <= bound + tol
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=st.tuples(st.integers(2, 10), st.integers(2, 8)),
+       seed=st.integers(0, 2**31 - 1))
+def test_topr_is_optimal_subset(shape, seed):
+    """Exhaustively check: among all size-r column subsets, top-r by column
+    l2 norm of S minimizes reconstruction error (paper §4.1)."""
+    import itertools
+
+    m, n = shape
+    r = max(1, n // 2)
+    g = _rand_g((m, n), seed).astype(np.float64)
+    q = dct_basis_np(n).T  # DCT-II matrix, float64
+    s = g @ q
+    norms = (s**2).sum(axis=0)
+    top = set(np.argsort(-norms)[:r].tolist())
+
+    def err(subset):
+        qr = q[:, list(subset)]
+        return np.linalg.norm(g - g @ qr @ qr.T) ** 2
+
+    best = min(err(c) for c in itertools.combinations(range(n), r))
+    assert err(top) <= best + 1e-9 * max(1.0, np.linalg.norm(g) ** 2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=matrix_shapes, seed=st.integers(0, 2**31 - 1))
+def test_full_rank_exact(shape, seed):
+    m, n = shape
+    g = _rand_g((m, n), seed)
+    q = dct2_matrix(n)
+    idx, b = dynamic_column_selection(jnp.asarray(g) @ q, n)
+    rec = np.asarray(back_project(b, q, idx))
+    np.testing.assert_allclose(rec, g, atol=1e-4 * max(1.0, np.abs(g).max() * n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), l=st.integers(1, 4))
+def test_batched_selection_matches_per_matrix(seed, l):
+    """Stacked-layer (vmapped) selection == per-layer selection."""
+    m, n, r = 12, 10, 4
+    g = _rand_g((l, m, n), seed)
+    q = dct2_matrix(n)
+    s = jnp.asarray(g) @ q
+    idx_b, b_b = dynamic_column_selection(s, r)
+    for i in range(l):
+        idx_i, b_i = dynamic_column_selection(s[i], r)
+        np.testing.assert_array_equal(np.asarray(idx_b[i]), np.asarray(idx_i))
+        np.testing.assert_allclose(np.asarray(b_b[i]), np.asarray(b_i), rtol=1e-6)
+
+
+def test_l1_norm_ranking_runs():
+    g = _rand_g((6, 8), 0)
+    q = dct2_matrix(8)
+    norms = column_norms(jnp.asarray(g) @ q, ord="l1")
+    idx = select_top_r(norms, 3)
+    assert idx.shape == (3,)
+    assert len(set(np.asarray(idx).tolist())) == 3

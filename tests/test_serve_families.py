@@ -1,0 +1,67 @@
+"""ServeEngine end-to-end generation across model families.
+
+The decode-path unit tests check one-step logits parity; these check the
+full prefill -> N-token autoregressive loop per family, including the
+modality stubs (whisper frames, VLM patch embeddings), ring-buffer local
+caches (gemma), SSM/RWKV recurrent caches, and MLA latent caches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKES
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+
+FAMS = ["whisper-large-v3", "llama-3.2-vision-90b", "deepseek-v3-671b",
+        "gemma3-27b", "rwkv6-1.6b", "jamba-1.5-large-398b"]
+
+
+def _batch(cfg, b, s, rng):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.n_image_tokens:
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_image_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_generate_matches_stepwise_forward(arch):
+    """Greedy generation == argmax over repeated full forwards (the
+    strongest cache-correctness check: every generated token feeds back)."""
+    cfg = SMOKES[arch]
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, s, new = 2, 6, 4
+    batch = _batch(cfg, b, s, rng)
+
+    eng = ServeEngine(cfg, params, max_len=s + new)
+    got = np.asarray(eng.generate(batch, max_new_tokens=new))
+
+    # oracle: grow the sequence with full forwards
+    toks = batch["tokens"]
+    for _ in range(new):
+        fb = dict(batch)
+        fb["tokens"] = toks
+        logits, _ = T.forward(params, fb, cfg)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        toks = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    want = np.asarray(toks[:, s:])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_generate_eos_early_exit():
+    cfg = SMOKES["qwen2.5-32b"]
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    batch = _batch(cfg, 2, 4, rng)
+    eng = ServeEngine(cfg, params, max_len=32)
+    out = eng.generate(batch, max_new_tokens=8, eos_id=0)
+    assert out.shape[0] == 2 and 1 <= out.shape[1] <= 8
