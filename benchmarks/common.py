@@ -6,14 +6,21 @@ paths, deterministic synthetic C4 stand-in data. Reported columns:
 final train loss, optimizer-state bytes (the paper's memory claim at
 exact ratio), and wall-clock per step (CPU; relative ordering only —
 absolute GPU times live in the paper).
+
+``bench_projected_step`` isolates the projected-Adam *optimizer step* itself
+at production leaf shape (stacked ``(layers, 4096, 4096)``, rank 256) and
+times the fused execution layer against the seed reference path — the
+numbers behind ``BENCH_optimizer_step.json`` (DESIGN.md §3).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.dct import dct2_matrix
 from repro.data.synthetic import SyntheticLM
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -81,6 +88,89 @@ def train(cfg, optimizer_name: str, steps: int = 40, *, seq: int = 64,
         "s_per_step": sum(t_steps[2:]) / max(len(t_steps) - 2, 1),
         "opt_kw": opt_kw,
     }
+
+
+# ---------------------------------------------------------------------------
+# optimizer-step microbench: fused execution layer vs seed reference path
+# ---------------------------------------------------------------------------
+def _time_rule_step(rule, shape, *, steps: int, warmup: int, seed: int = 0):
+    """Wall-time per ``rule.update`` call on one stacked leaf + peak live
+    bytes of the compiled step (args + outputs + temps - donated aliases)."""
+    from repro.optim.common import Context
+
+    dim = shape[-1]
+    basis = {str(dim): dct2_matrix(dim, jnp.float32)}
+    g = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    param = jnp.zeros(shape, jnp.float32)
+
+    def step(g, state, t):
+        ctx = Context(step=t, bases=basis, key=jax.random.PRNGKey(1))
+        return rule.update(g, state, param, ctx)
+
+    state = rule.init(shape, jnp.float32)
+    t0 = jnp.ones((), jnp.int32)
+    compiled = jax.jit(step, donate_argnums=(1,)).lower(g, state, t0).compile()
+    mem = compiled.memory_analysis()
+    peak = None
+    if mem is not None:
+        peak = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+
+    times = []
+    for i in range(warmup + steps):
+        t = jnp.asarray(i + 1, jnp.int32)
+        tic = time.perf_counter()
+        d, state = compiled(g, state, t)
+        jax.block_until_ready(d)
+        times.append(time.perf_counter() - tic)
+    return {
+        "s_per_step": sum(times[warmup:]) / max(steps, 1),
+        "peak_live_bytes": peak,
+    }
+
+
+def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
+                         steps: int = 3, warmup: int = 1,
+                         out_path: str | None = "BENCH_optimizer_step.json",
+                         ) -> dict:
+    """Fused vs reference DCT-AdamW step on a stacked (layers, dim, dim)
+    leaf. The fused mode is the host-appropriate one: Pallas kernels on TPU,
+    the Makhoul fft dataflow elsewhere (DESIGN.md §3)."""
+    import dataclasses
+
+    from repro.kernels import ops as kops
+    from repro.optim.projected_adam import ProjectedAdamRule
+
+    shape = (layers, dim, dim)
+    base = ProjectedAdamRule(rank=rank, projector="dct", residual="ef",
+                             ef_dtype="q8", fused="off")
+    fused_mode = "on" if kops.ON_TPU else "fft"
+    result = {
+        "bench": "optimizer_step",
+        "leaf_shape": list(shape),
+        "rank": rank,
+        "steps_timed": steps,
+        "backend": jax.default_backend(),
+        "modes": {},
+    }
+    for label, mode in (("reference", "off"), ("fused", fused_mode)):
+        rule = dataclasses.replace(base, fused=mode)
+        row = _time_rule_step(rule, shape, steps=steps, warmup=warmup)
+        row["fused_mode"] = mode
+        result["modes"][label] = row
+        print(f"[optimizer_step] {label:10s} ({mode:3s}) "
+              f"{row['s_per_step'] * 1e3:9.1f} ms/step "
+              f"peak={row['peak_live_bytes'] / 1e9 if row['peak_live_bytes'] else 0:.2f} GB")
+    ref = result["modes"]["reference"]["s_per_step"]
+    fus = result["modes"]["fused"]["s_per_step"]
+    result["speedup_fused_vs_reference"] = ref / fus if fus > 0 else None
+    print(f"[optimizer_step] speedup fused/reference = "
+          f"{result['speedup_fused_vs_reference']:.2f}x")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[optimizer_step] wrote {out_path}")
+    return result
 
 
 def fmt_row(name: str, r: dict, extra: str = "") -> str:

@@ -3,10 +3,15 @@
 Claims checked: DCT-AdamW loss <= LDAdamW loss (approx); DCT-AdamW
 low-rank state < LDAdamW state (two stored projection bases vs two index
 sets + shared DCT); full AdamW is the reference lower bound on loss.
+
+``run_step_bench`` additionally times the fused projected-Adam execution
+layer (DESIGN.md §3) against the seed reference path on a production-shaped
+stacked leaf and emits ``BENCH_optimizer_step.json`` — the per-PR perf
+trajectory record for the optimizer hot path.
 """
 from __future__ import annotations
 
-from .common import fmt_row, tiny_llama, train
+from .common import bench_projected_step, fmt_row, tiny_llama, train
 
 
 def run(steps: int = 40, rank: int = 16) -> list[dict]:
@@ -34,5 +39,27 @@ def run(steps: int = 40, rank: int = 16) -> list[dict]:
     return rows
 
 
+def run_step_bench(*, layers: int = 2, dim: int = 4096, rank: int = 256,
+                   out_path: str = "BENCH_optimizer_step.json") -> dict:
+    """Fused vs reference optimizer-step timing at production leaf shape."""
+    return bench_projected_step(layers=layers, dim=dim, rank=rank,
+                                out_path=out_path)
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--skip-table", action="store_true",
+                    help="only the optimizer-step microbench")
+    ap.add_argument("--step-dim", type=int, default=4096)
+    ap.add_argument("--step-layers", type=int, default=2)
+    ap.add_argument("--step-rank", type=int, default=256)
+    ap.add_argument("--step-out", default="BENCH_optimizer_step.json")
+    args = ap.parse_args()
+    if not args.skip_table:
+        run(steps=args.steps, rank=args.rank)
+    run_step_bench(layers=args.step_layers, dim=args.step_dim,
+                   rank=args.step_rank, out_path=args.step_out)

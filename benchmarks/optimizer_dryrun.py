@@ -33,6 +33,7 @@ def main(argv=None):
     from repro.launch.mesh import make_production_mesh
     from repro.models import transformer as T
     from repro.optim.api import get_optimizer
+    from repro.parallel import compat
     from repro.parallel import sharding as sh
     from repro.roofline.analysis import analyze_compiled
 
@@ -42,7 +43,7 @@ def main(argv=None):
     for name in args.optimizers.split(","):
         kw = {} if name == "adamw" else {"rank": args.rank}
         opt = get_optimizer(name, lr=0.01, **kw)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             params_sds = jax.eval_shape(
                 partial(T.init_params, cfg, jax.random.PRNGKey(0)))
             p_specs = sh.params_specs(params_sds, mesh)

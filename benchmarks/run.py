@@ -9,6 +9,8 @@ Sections:
   frugal_fira          Table 6           projection swap in FRUGAL/FIRA
   projection_errors    Fig 1 / App F     factorization error Trion vs Dion
   finetune             Tables 7-8        fine-tune proxy across optimizers
+  optimizer_step       DESIGN.md §3      fused vs reference projected-Adam
+                                         step -> BENCH_optimizer_step.json
 """
 from __future__ import annotations
 
@@ -40,6 +42,13 @@ def main(argv=None) -> int:
         "finetune": lambda: finetune.run(
             pretrain_steps=10 if args.fast else 30,
             ft_steps=10 if args.fast else 25),
+        # fast mode writes to a scratch path so it never clobbers the
+        # committed production-shape perf record
+        "optimizer_step": lambda: dct_adamw_vs_ldadamw.run_step_bench(
+            dim=1024 if args.fast else 4096,
+            rank=64 if args.fast else 256,
+            out_path=("BENCH_optimizer_step_fast.json" if args.fast
+                      else "BENCH_optimizer_step.json")),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     failures = 0

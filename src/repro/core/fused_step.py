@@ -1,0 +1,151 @@
+"""Fused execution layer for the projected-Adam hot path (DESIGN.md §3).
+
+The reference ``ProjectedAdamRule`` path performs, per DCT leaf and step:
+
+    S = G @ Q          (refresh: ranking statistic, O(m n^2))
+    g_low = G @ Q_r    (projection, O(m n r))       <- duplicated pass over G
+    d     = u @ Q_r^T  (back-projection)            <- gathers Q_r^T
+    recon = g_low @ Q_r^T                           <- gathers Q_r^T AGAIN
+    EF    = dequant(q8) -> full fp32 (m, n) temp    <- materialized in HBM
+
+This module is the fused dispatch that removes every redundancy: the
+low-rank factor is extracted from ``S`` directly (paper Alg. 1 line 8 — no
+second projection matmul), both back-projections share one ``Q_r^T`` gather,
+and the int8 error-feedback buffer is consumed/produced by fused quantize
+kernels so the fp32 EF temporary never exists.
+
+Three concrete modes (``resolve`` maps a rule's ``fused`` field to one):
+
+  ``"on"``   — Pallas kernel path (``kernels.ops``): TPU production;
+               interpret mode off-TPU, which is how the parity tests run it.
+  ``"fft"``  — pure-jnp fused dataflow with the forward transform computed by
+               Makhoul's N-point FFT (paper Appendix D): the host/GPU fast
+               path. ``S`` costs O(m n log n) instead of the O(m n^2) matmul;
+               back-projection stays a (shared-gather) matmul, which at
+               r << n is cheaper than an inverse transform.
+  ``"off"``  — the seed jnp reference path, bit-identical to the seed repo.
+
+``"auto"`` resolves to the kernel path on TPU and degrades to the reference
+path elsewhere; benchmarks/tests opt into "on"/"fft" explicitly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dct import makhoul_dct2
+from repro.core.error_feedback import QuantizedBuffer, dequantize_q8, quantize_q8
+from repro.core.selection import (
+    back_project,
+    column_norms,
+    dual_back_project,
+    dynamic_column_selection,
+    gather_columns,
+    select_top_r,
+)
+from repro.kernels import ops
+
+FUSED_MODES = ("auto", "off", "on", "fft")
+
+# process-wide default consulted by rules whose ``fused`` field is "auto";
+# itself "auto" = kernels on TPU, reference elsewhere.
+_DEFAULT_MODE = "auto"
+
+
+def set_default_fused_mode(mode: str) -> None:
+    """Override the process-wide dispatch default (benchmarks/experiments)."""
+    global _DEFAULT_MODE
+    assert mode in FUSED_MODES, mode
+    _DEFAULT_MODE = mode
+
+
+def default_fused_mode() -> str:
+    return _DEFAULT_MODE
+
+
+def resolve(mode: str) -> str:
+    """Rule-level mode -> concrete mode in {"off", "on", "fft"}."""
+    if mode not in FUSED_MODES:
+        raise ValueError(f"unknown fused mode {mode!r}; expected one of "
+                         f"{FUSED_MODES}")
+    if mode == "auto":
+        mode = _DEFAULT_MODE
+    if mode == "auto":
+        return "on" if ops.ON_TPU else "off"
+    return mode
+
+
+# ---------------------------------------------------------------------------
+# select + project: ONE pass over G
+# ---------------------------------------------------------------------------
+def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
+                       norm: str = "l2", mode: str
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Dynamic column selection + low-rank extraction in one ``G``-sized pass.
+
+    Returns ``(idx (..., r), g_low (..., m, r))``. The kernel path fuses the
+    column-norm accumulation into the ``S = G @ Q`` matmul; the fft path
+    computes ``S`` row-wise by Makhoul FFT. Either way ``g_low`` is sliced
+    out of ``S`` (``S[:, idx] == G @ Q[:, idx]`` exactly), so the reference
+    path's second projection matmul never runs.
+    """
+    if mode == "on":
+        s, norms = ops.dct_project_op(gf, q)
+        if norm != "l2":
+            # kernel accumulates squared-l2 only; re-rank from resident S
+            norms = column_norms(s, norm)
+        idx = select_top_r(norms, r)
+        g_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
+        return idx, g_low
+    return dynamic_column_selection(makhoul_dct2(gf), r, ord=norm)
+
+
+def project_with_indices(gf: jax.Array, q: jax.Array,
+                         idx: jax.Array) -> jax.Array:
+    """Keep-branch projection ``G @ Q[:, idx]`` for non-refresh steps
+    (T_u > 1). A gather + skinny matmul — no full-width ``S`` pass."""
+    qr = gather_columns(q, idx)
+    return jnp.einsum("...mn,...nr->...mr", gf, qr.astype(gf.dtype))
+
+
+# ---------------------------------------------------------------------------
+# back-projection: both outputs from ONE Q_r^T gather
+# ---------------------------------------------------------------------------
+def fused_dual_backproject(u_low: jax.Array, g_low: jax.Array, q: jax.Array,
+                           idx: jax.Array, *, mode: str
+                           ) -> tuple[jax.Array, jax.Array]:
+    """``(u_low @ Q_r^T, g_low @ Q_r^T)`` sharing one ``Q_r^T`` gather."""
+    if mode == "on":
+        qt = jnp.swapaxes(q, -1, -2)
+        return ops.colgather_matmul_dual_op(u_low, g_low, qt, idx)
+    return dual_back_project(u_low, g_low, q, idx)
+
+
+def fused_backproject(u_low: jax.Array, q: jax.Array, idx: jax.Array, *,
+                      mode: str) -> jax.Array:
+    if mode == "on":
+        return ops.colgather_matmul_op(u_low, jnp.swapaxes(q, -1, -2), idx)
+    return back_project(u_low, q, idx)
+
+
+# ---------------------------------------------------------------------------
+# int8 error feedback: no fp32 (m, n) temporary
+# ---------------------------------------------------------------------------
+def ef_add(gf: jax.Array, ef, *, mode: str) -> jax.Array:
+    """``G + EF`` — fused dequant-add on the kernel path, so the dequantized
+    fp32 buffer never hits HBM."""
+    if isinstance(ef, QuantizedBuffer):
+        if mode == "on":
+            return ops.dequant_add_ef_op(gf, ef.q, ef.scale)
+        return gf + dequantize_q8(ef)
+    return gf + ef
+
+
+def ef_store(resid: jax.Array, ef_dtype: str, *, mode: str):
+    """Residual -> EF buffer (int8 payload written in one pass)."""
+    if ef_dtype == "q8":
+        if mode == "on":
+            qv, scale = ops.quantize_ef_op(resid)
+            return QuantizedBuffer(q=qv, scale=scale)
+        return quantize_q8(resid)
+    return resid

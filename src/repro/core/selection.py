@@ -82,6 +82,19 @@ def back_project(b: jax.Array, q: jax.Array, idx: jax.Array) -> jax.Array:
     return b @ qr_t
 
 
+def dual_back_project(b1: jax.Array, b2: jax.Array, q: jax.Array,
+                      idx: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Two back-projections through the same selected columns, sharing one
+    ``Q^T`` row gather (DESIGN.md §3): the projected-Adam step needs both
+    the descent direction ``u @ Q_r^T`` and the residual reconstruction
+    ``g_low @ Q_r^T`` every step, so the gathered ``(..., r, n)`` factor is
+    materialized once instead of twice. TPU analogue:
+    kernels/colgather_matmul_dual (one VMEM gather, zero HBM copies).
+    """
+    qr_t = jnp.take(q.T, idx, axis=0)       # (..., r, n)
+    return b1 @ qr_t, b2 @ qr_t
+
+
 def reconstruction_error_sq(g: jax.Array, q: jax.Array, idx: jax.Array) -> jax.Array:
     """``||G - Q_r Q_r^T' G||_F^2`` via the §4.1 identity (right projection):
 

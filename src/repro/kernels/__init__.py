@@ -2,24 +2,31 @@
 
   dct_project      — fused S = G @ Q + column-norm ranking statistic
   colgather_matmul — fused back-projection b @ Q[:, idx]^T (scalar-prefetch
-                     driven gather, never materializes Q_r)
+                     driven gather, never materializes Q_r); the _dual
+                     variant back-projects two factors from one gather
   newton_schulz    — NS5 on the low-rank factor (r-sized Gram in VMEM)
   quant_ef         — int8 error-feedback quantize / fused dequant-add
   flash_attention  — online-softmax attention, GQA/causal/window, VMEM-
                      resident softmax state (the train/prefill memory-term
                      fix identified in EXPERIMENTS.md §Roofline)
 
+dct_project / colgather_matmul / quant_ef accept leading stacked-layer axes
+(collapsed into a batch grid dimension), so the scan-stacked ``(layers, m,
+n)`` leaves every production config emits run on the kernel path; the fused
+projected-Adam step that drives them is core/fused_step.py (DESIGN.md §3).
+
 Each has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes against it in
 interpret mode (this container is CPU-only; TPU v5e is the target).
 """
 from . import ops, ref
-from .colgather_matmul import colgather_matmul
+from .colgather_matmul import colgather_matmul, colgather_matmul_dual
 from .dct_project import dct_project
 from .flash_attention import flash_attention
 from .newton_schulz import newton_schulz_pallas, ns_iteration
 from .quant_ef import dequant_add_ef, quantize_ef
 
 __all__ = [
-    "ops", "ref", "colgather_matmul", "dct_project", "flash_attention",
-    "newton_schulz_pallas", "ns_iteration", "dequant_add_ef", "quantize_ef",
+    "ops", "ref", "colgather_matmul", "colgather_matmul_dual", "dct_project",
+    "flash_attention", "newton_schulz_pallas", "ns_iteration",
+    "dequant_add_ef", "quantize_ef",
 ]

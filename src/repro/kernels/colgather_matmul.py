@@ -7,9 +7,22 @@ materializes the gathered matrix in HBM: the selected rows are gathered
 VMEM->VMEM from a resident column stripe of ``Q^T``, driven by the
 scalar-prefetched index vector.
 
-Grid ``(nj, ni)`` — ``j`` outermost so the ``(n, bn)`` stripe of ``Q^T`` and
-its gathered ``(r, bn)`` scratch are built once per column block and reused
-across all row blocks ``i``.
+Two entry points (DESIGN.md §3):
+
+  * ``colgather_matmul(b, qt, idx)``            — one back-projection.
+  * ``colgather_matmul_dual(b1, b2, qt, idx)``  — the projected-Adam step's
+    descent direction ``u @ Q_r^T`` AND residual reconstruction
+    ``g_low @ Q_r^T`` from ONE gather: the ``(r, bn)`` scratch is built once
+    per column stripe and feeds both matmuls, so ``Q`` is read once instead
+    of twice.
+
+Both accept leading stacked-layer axes on ``b``/``idx`` — collapsed into a
+leading batch grid dimension with per-layer index vectors (the shapes every
+scan-stacked config produces).
+
+Grid ``(nb, nj, ni)`` — ``j`` after batch so the ``(n, bn)`` stripe of
+``Q^T`` and its gathered ``(r, bn)`` scratch are built once per ``(b, j)``
+and reused across all row blocks ``i``.
 """
 from __future__ import annotations
 
@@ -23,23 +36,94 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK = (512, 256)  # (bm rows of b, bn output columns)
 
 
+def _build_gather(idx_ref, bi, qt_ref, gather_ref, r: int):
+    def body(k, _):
+        row = idx_ref[bi, k]
+        gather_ref[pl.ds(k, 1), :] = qt_ref[pl.ds(row, 1), :]
+        return ()
+
+    jax.lax.fori_loop(0, r, body, ())
+
+
 def _kernel(idx_ref, b_ref, qt_ref, out_ref, gather_ref, *, r: int):
-    i = pl.program_id(1)
+    bi = pl.program_id(0)
+    i = pl.program_id(2)
 
     @pl.when(i == 0)
-    def _build_gather():
-        def body(k, _):
-            row = idx_ref[k]
-            gather_ref[pl.ds(k, 1), :] = qt_ref[pl.ds(row, 1), :]
-            return ()
+    def _gather():
+        _build_gather(idx_ref, bi, qt_ref, gather_ref, r)
 
-        jax.lax.fori_loop(0, r, body, ())
-
-    out_ref[...] = jnp.dot(
-        b_ref[...].astype(jnp.float32),
-        gather_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
+    qr = gather_ref[...].astype(jnp.float32)
+    out_ref[0] = jnp.dot(
+        b_ref[0].astype(jnp.float32), qr, preferred_element_type=jnp.float32
     ).astype(out_ref.dtype)
+
+
+def _kernel_dual(idx_ref, b1_ref, b2_ref, qt_ref, o1_ref, o2_ref, gather_ref,
+                 *, r: int):
+    bi = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _gather():
+        _build_gather(idx_ref, bi, qt_ref, gather_ref, r)
+
+    qr = gather_ref[...].astype(jnp.float32)
+    o1_ref[0] = jnp.dot(
+        b1_ref[0].astype(jnp.float32), qr, preferred_element_type=jnp.float32
+    ).astype(o1_ref.dtype)
+    o2_ref[0] = jnp.dot(
+        b2_ref[0].astype(jnp.float32), qr, preferred_element_type=jnp.float32
+    ).astype(o2_ref.dtype)
+
+
+def _norm_operands(bs: tuple[jax.Array, ...], qt: jax.Array, idx: jax.Array):
+    """Collapse leading axes; validate shapes. Returns (batched bs, idx2d,
+    batch_shape, m, r, n)."""
+    *batch, m, r = bs[0].shape
+    n = qt.shape[1]
+    assert qt.shape[0] == n, (qt.shape,)
+    for b in bs[1:]:
+        assert b.shape == bs[0].shape, (b.shape, bs[0].shape)
+    assert idx.shape == (*batch, r), (idx.shape, bs[0].shape)
+    bb = tuple(b.reshape((-1, m, r)) for b in bs)
+    idx2 = idx.reshape((-1, r)).astype(jnp.int32)
+    return bb, idx2, tuple(batch), m, r, n
+
+
+def _call(bs, qt, idx, *, block, interpret, out_dtype):
+    bb, idx2, batch, m, r, n = _norm_operands(bs, qt, idx)
+    nb = bb[0].shape[0]
+    out_dtype = out_dtype or bs[0].dtype
+    bm, bn = block
+    mp, np_ = (-m % bm), (-n % bn)
+    bp = tuple(jnp.pad(b, ((0, 0), (0, mp), (0, 0))) if mp else b for b in bb)
+    qtp = jnp.pad(qt, ((0, 0), (0, np_))) if np_ else qt
+    mm, nn = m + mp, n + np_
+    ni, nj = mm // bm, nn // bn
+
+    nops = len(bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, nj, ni),
+        in_specs=[
+            *([pl.BlockSpec((1, bm, r), lambda b, j, i, idx_ref: (b, i, 0))]
+              * nops),
+            pl.BlockSpec((qt.shape[0], bn), lambda b, j, i, idx_ref: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, j, i, idx_ref: (b, i, j))
+        ] * nops,
+        scratch_shapes=[pltpu.VMEM((r, bn), qt.dtype)],
+    )
+    kernel = _kernel if nops == 1 else _kernel_dual
+    outs = pl.pallas_call(
+        functools.partial(kernel, r=r),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((nb, mm, nn), out_dtype)] * nops,
+        interpret=interpret,
+    )(idx2, *bp, qtp)
+    return tuple(o[:, :m, :n].reshape((*batch, m, n)) for o in outs)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
@@ -52,33 +136,24 @@ def colgather_matmul(
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """``O[m, n] = b[m, r] @ qt[idx, :][r, n]``; ``qt`` is ``Q^T`` (n, n),
-    ``idx`` (r,) int32. Output dtype defaults to ``b.dtype``."""
-    m, r = b.shape
-    n = qt.shape[1]
-    assert qt.shape[0] == n and idx.shape == (r,), (b.shape, qt.shape, idx.shape)
-    out_dtype = out_dtype or b.dtype
-    bm, bn = block
-    mp, np_ = (-m % bm), (-n % bn)
-    bp = jnp.pad(b, ((0, mp), (0, 0))) if mp else b
-    qtp = jnp.pad(qt, ((0, 0), (0, np_))) if np_ else qt
-    mm, nn = m + mp, n + np_
-    ni, nj = mm // bm, nn // bn
+    """``O[..., m, n] = b[..., m, r] @ qt[idx, :]``; ``qt`` is ``Q^T`` (n, n),
+    ``idx`` (..., r) int32 per-layer. Output dtype defaults to ``b.dtype``."""
+    (out,) = _call((b,), qt, idx, block=block, interpret=interpret,
+                   out_dtype=out_dtype)
+    return out
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nj, ni),
-        in_specs=[
-            pl.BlockSpec((bm, r), lambda j, i, idx_ref: (i, 0)),
-            pl.BlockSpec((qt.shape[0], bn), lambda j, i, idx_ref: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, i, idx_ref: (i, j)),
-        scratch_shapes=[pltpu.VMEM((r, bn), qt.dtype)],
-    )
-    out = pl.pallas_call(
-        functools.partial(_kernel, r=r),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
-        interpret=interpret,
-    )(idx.astype(jnp.int32), bp, qtp)
-    return out[:m, :n]
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def colgather_matmul_dual(
+    b1: jax.Array,
+    b2: jax.Array,
+    qt: jax.Array,
+    idx: jax.Array,
+    *,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = False,
+    out_dtype=None,
+) -> tuple[jax.Array, jax.Array]:
+    """``(b1 @ qt[idx, :], b2 @ qt[idx, :])`` sharing one index gather."""
+    return _call((b1, b2), qt, idx, block=block, interpret=interpret,
+                 out_dtype=out_dtype)

@@ -5,9 +5,15 @@ The TPU-native replacement for the paper's Makhoul FFT fast path (DESIGN.md
 column ranking statistic ``norms[j] = sum_i S[i, j]^2``, so the dynamic column
 selection needs no second read of ``S`` from HBM.
 
-Grid layout ``(nj, ni, nk)`` — ``j`` (output column blocks) outermost so the
-``norms`` block for a given ``j`` stays resident in VMEM across the whole
-``(i, k)`` sweep; ``k`` innermost for the standard accumulator pattern.
+Inputs may carry arbitrary leading stacked-layer axes — ``(layers, m, n)`` or
+``(layers, experts, m, n)`` from scan-stacked models. They are collapsed into
+one leading *grid* dimension, so every layer's projection runs from the same
+kernel launch against the single shared basis ``Q`` (DESIGN.md §3).
+
+Grid layout ``(nb, nj, ni, nk)`` — batch outermost; then ``j`` (output column
+blocks) so the ``norms`` block for a given ``(b, j)`` stays resident in VMEM
+across the whole ``(i, k)`` sweep; ``k`` innermost for the standard
+accumulator pattern.
 
 Block shapes are multiples of the (8, 128) fp32 tile; the default 256^3 keeps
 the working set (G + Q + S tiles + fp32 acc + norms) around 1 MB of VMEM.
@@ -25,15 +31,15 @@ DEFAULT_BLOCK = (256, 256, 256)  # (bm, bn, bk)
 
 
 def _kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref, *, nk: int, out_dtype):
-    i = pl.program_id(1)
-    k = pl.program_id(2)
+    i = pl.program_id(2)
+    k = pl.program_id(3)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        g_ref[...].astype(jnp.float32),
+        g_ref[0].astype(jnp.float32),
         q_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
@@ -41,16 +47,16 @@ def _kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref, *, nk: int, out_dtype):
     @pl.when(k == nk - 1)
     def _finalize():
         acc = acc_ref[...]
-        s_ref[...] = acc.astype(out_dtype)
+        s_ref[0] = acc.astype(out_dtype)
         col = jnp.sum(acc * acc, axis=0, keepdims=True)
 
         @pl.when(i == 0)
         def _first():
-            norms_ref[...] = col
+            norms_ref[0] = col
 
         @pl.when(i > 0)
         def _rest():
-            norms_ref[...] += col
+            norms_ref[0] += col
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
@@ -64,35 +70,41 @@ def dct_project(
 ) -> tuple[jax.Array, jax.Array]:
     """Returns ``(S, norms)``: ``S = G @ Q`` and fp32 squared-l2 column norms.
 
-    ``g``: (m, n); ``q``: (n, n). Arbitrary shapes are zero-padded up to block
-    multiples (padded columns yield norm 0 and are sliced away).
+    ``g``: (..., m, n); ``q``: (n, n) shared basis. Leading axes become the
+    kernel's batch grid dimension. Arbitrary shapes are zero-padded up to
+    block multiples (padded columns yield norm 0 and are sliced away).
+    Returns ``S (..., m, n)`` and ``norms (..., n)``.
     """
-    m, n = g.shape
+    *batch, m, n = g.shape
     assert q.shape == (n, n), (g.shape, q.shape)
     out_dtype = out_dtype or g.dtype
+    gb = g.reshape((-1, m, n))
+    nb = gb.shape[0]
     bm, bn, bk = block
     mp, np_, kp = (-m % bm), (-n % bn), (-n % bk)
-    gp = jnp.pad(g, ((0, mp), (0, kp))) if mp or kp else g
+    gp = jnp.pad(gb, ((0, 0), (0, mp), (0, kp))) if mp or kp else gb
     qp = jnp.pad(q, ((0, kp), (0, np_))) if kp or np_ else q
     mm, nn, kk = m + mp, n + np_, n + kp
     ni, nj, nk = mm // bm, nn // bn, kk // bk
 
     s, norms = pl.pallas_call(
         functools.partial(_kernel, nk=nk, out_dtype=out_dtype),
-        grid=(nj, ni, nk),
+        grid=(nb, nj, ni, nk),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda j, i, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda j, i, k: (k, j)),
+            pl.BlockSpec((1, bm, bk), lambda b, j, i, k: (b, i, k)),
+            pl.BlockSpec((bk, bn), lambda b, j, i, k: (k, j)),
         ],
         out_specs=[
-            pl.BlockSpec((bm, bn), lambda j, i, k: (i, j)),
-            pl.BlockSpec((1, bn), lambda j, i, k: (0, j)),
+            pl.BlockSpec((1, bm, bn), lambda b, j, i, k: (b, i, j)),
+            pl.BlockSpec((1, 1, bn), lambda b, j, i, k: (b, 0, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((mm, nn), out_dtype),
-            jax.ShapeDtypeStruct((1, nn), jnp.float32),
+            jax.ShapeDtypeStruct((nb, mm, nn), out_dtype),
+            jax.ShapeDtypeStruct((nb, 1, nn), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(gp, qp)
-    return s[:m, :n], norms[0, :n]
+    s = s[:, :m, :n].reshape((*batch, m, n))
+    norms = norms[:, 0, :n].reshape((*batch, n))
+    return s, norms

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import jax
 
-from .colgather_matmul import colgather_matmul
+from .colgather_matmul import colgather_matmul, colgather_matmul_dual
 from .dct_project import dct_project
 from .flash_attention import flash_attention
 from .newton_schulz import newton_schulz_pallas, ns_iteration
@@ -25,6 +25,11 @@ def dct_project_op(g, q, **kw):
 def colgather_matmul_op(b, qt, idx, **kw):
     kw.setdefault("interpret", _INTERPRET)
     return colgather_matmul(b, qt, idx, **kw)
+
+
+def colgather_matmul_dual_op(b1, b2, qt, idx, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return colgather_matmul_dual(b1, b2, qt, idx, **kw)
 
 
 def newton_schulz_op(x, **kw):

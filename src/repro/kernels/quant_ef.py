@@ -1,13 +1,17 @@
 """Bandwidth-bound int8 error-feedback kernels.
 
 Two fused passes used by DCT-AdamW's quantized EF (paper §2.4):
-  * ``quantize_ef``     — residual (m, n) fp -> (int8 payload, per-row fp32
-    scale) in a single HBM read + int8 write (4x HBM write reduction vs fp32).
+  * ``quantize_ef``     — residual (..., m, n) fp -> (int8 payload, per-row
+    fp32 scale) in a single HBM read + int8 write (4x HBM write reduction vs
+    fp32).
   * ``dequant_add_ef``  — ``G + q * scale`` fused so the dequantized fp32 EF
-    buffer never exists in HBM.
+    buffer never exists in HBM (the projected-Adam step reads the EF payload
+    straight into the gradient accumulation, DESIGN.md §3).
 
-Rows are processed in full width per grid step so the per-row amax reduction
-and the scaling stay in registers/VMEM.
+Leading stacked-layer axes are collapsed into a leading batch grid dimension
+(scan-stacked ``(layers, m, n)`` leaves run in one launch). Rows are
+processed in full width per grid step so the per-row amax reduction and the
+scaling stay in registers/VMEM.
 """
 from __future__ import annotations
 
@@ -22,7 +26,7 @@ DEFAULT_BM = 256  # rows per grid step
 
 def _quant_kernel(x_ref, q_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)
-    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     scale_ref[...] = scale
@@ -35,52 +39,58 @@ def _dequant_add_kernel(g_ref, q_ref, scale_ref, out_ref):
     ).astype(out_ref.dtype)
 
 
-def _pad_rows(x, bm):
-    pad = -x.shape[0] % bm
-    return (jnp.pad(x, ((0, pad), (0, 0))) if pad else x), x.shape[0] + pad
+def _batch_rows(x, bm):
+    """(..., m, n) -> row-padded (nb, mm, n) + original dims."""
+    *batch, m, n = x.shape
+    xb = x.reshape((-1, m, n))
+    pad = -m % bm
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad), (0, 0)))
+    return xb, tuple(batch), m, m + pad, n
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def quantize_ef(x: jax.Array, *, bm: int = DEFAULT_BM,
                 interpret: bool = False) -> tuple[jax.Array, jax.Array]:
-    """(m, n) fp -> ((m, n) int8, (m, 1) fp32 row scales)."""
-    m, n = x.shape
-    xp, mm = _pad_rows(x, bm)
+    """(..., m, n) fp -> ((..., m, n) int8, (..., m, 1) fp32 row scales)."""
+    xp, batch, m, mm, n = _batch_rows(x, bm)
+    nb = xp.shape[0]
     q, scale = pl.pallas_call(
         _quant_kernel,
-        grid=(mm // bm,),
-        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        grid=(nb, mm // bm),
+        in_specs=[pl.BlockSpec((1, bm, n), lambda b, i: (b, i, 0))],
         out_specs=[
-            pl.BlockSpec((bm, n), lambda i: (i, 0)),
-            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, bm, n), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bm, 1), lambda b, i: (b, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((mm, n), jnp.int8),
-            jax.ShapeDtypeStruct((mm, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, mm, n), jnp.int8),
+            jax.ShapeDtypeStruct((nb, mm, 1), jnp.float32),
         ],
         interpret=interpret,
     )(xp)
-    return q[:m], scale[:m]
+    return (q[:, :m].reshape((*batch, m, n)),
+            scale[:, :m].reshape((*batch, m, 1)))
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def dequant_add_ef(g: jax.Array, q: jax.Array, scale: jax.Array, *,
                    bm: int = DEFAULT_BM, interpret: bool = False) -> jax.Array:
     """``G + dequant(q, scale)`` fused; output dtype follows ``G``."""
-    m, n = g.shape
-    gp, mm = _pad_rows(g, bm)
-    qp, _ = _pad_rows(q, bm)
-    sp, _ = _pad_rows(scale, bm)
+    gp, batch, m, mm, n = _batch_rows(g, bm)
+    qp, *_ = _batch_rows(q, bm)
+    sp, *_ = _batch_rows(scale, bm)
+    nb = gp.shape[0]
     out = pl.pallas_call(
         _dequant_add_kernel,
-        grid=(mm // bm,),
+        grid=(nb, mm // bm),
         in_specs=[
-            pl.BlockSpec((bm, n), lambda i: (i, 0)),
-            pl.BlockSpec((bm, n), lambda i: (i, 0)),
-            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, bm, n), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bm, n), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bm, 1), lambda b, i: (b, i, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((mm, n), g.dtype),
+        out_specs=pl.BlockSpec((1, bm, n), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, mm, n), g.dtype),
         interpret=interpret,
     )(gp, qp, sp)
-    return out[:m]
+    return out[:, :m].reshape((*batch, m, n))

@@ -8,16 +8,26 @@ from repro.core.newton_schulz import NS_COEFFS
 
 
 def dct_project_ref(g: jax.Array, q: jax.Array, out_dtype=None):
+    """``g``: (..., m, n); ``q``: (n, n). Returns (S, per-column sq-norms)."""
     s32 = g.astype(jnp.float32) @ q.astype(jnp.float32)
-    norms = jnp.sum(s32 * s32, axis=0)
+    norms = jnp.sum(s32 * s32, axis=-2)
     return s32.astype(out_dtype or g.dtype), norms
 
 
 def colgather_matmul_ref(b: jax.Array, qt: jax.Array, idx: jax.Array,
                          out_dtype=None):
-    gathered = qt[idx, :].astype(jnp.float32)
+    """``b``: (..., m, r); ``qt``: (n, n); ``idx``: (..., r) per-layer."""
+    gathered = jnp.take(qt, idx, axis=0).astype(jnp.float32)  # (..., r, n)
     out = b.astype(jnp.float32) @ gathered
     return out.astype(out_dtype or b.dtype)
+
+
+def colgather_matmul_dual_ref(b1, b2, qt, idx, out_dtype=None):
+    gathered = jnp.take(qt, idx, axis=0).astype(jnp.float32)
+    o1 = b1.astype(jnp.float32) @ gathered
+    o2 = b2.astype(jnp.float32) @ gathered
+    dt = out_dtype or b1.dtype
+    return o1.astype(dt), o2.astype(dt)
 
 
 def ns_iteration_ref(x: jax.Array) -> jax.Array:
@@ -40,7 +50,7 @@ def newton_schulz_ref(x: jax.Array, steps: int = 5, eps: float = 1e-7):
 
 def quantize_ef_ref(x: jax.Array):
     xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale

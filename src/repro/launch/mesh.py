@@ -5,24 +5,21 @@ touches jax device state. Single-pod: (data=16, model=16) = 256 chips;
 multi-pod: (pod=2, data=16, model=16) = 512 chips. ``pod`` and ``data``
 jointly form the FSDP/batch axes; ``model`` is TP/EP.
 
-Use ``with jax.set_mesh(mesh):`` around lowering — that installs the
-abstract mesh that repro.parallel.sharding reads (the legacy ``with mesh:``
-context does NOT).
+Use ``with compat.set_mesh(mesh):`` around lowering — that installs the
+mesh that repro.parallel.sharding reads (abstract mesh on current jax,
+thread-resources physical mesh on older releases).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.parallel import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh for experiments (e.g. scaling the pod axis)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -21,6 +21,12 @@ Per 2D leaf (oriented so the projected dim is last, size n <= m):
     Xi   = G_t - g_t Q_crt^T                (residual; see table)
     m, v = Adam moments on g_t; u = mhat / (sqrt(vhat) + eps)
     D    = u @ Q_crt^T (+ residual term)
+
+Execution dispatch (``fused`` field, DESIGN.md §3): for the dct projector
+the hot path runs through core/fused_step.py — one fused select+project
+pass over G (g_t extracted from S, no second matmul), one shared Q_r^T
+gather for both back-projections, and int8 EF consumed/produced by fused
+quantize kernels. "off" is the bit-identical seed reference path.
 """
 from __future__ import annotations
 
@@ -30,12 +36,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.error_feedback import (
-    QuantizedBuffer,
-    dequantize_q8,
-    quantize_q8,
-    zeros_q8,
-)
+from repro.core import fused_step
+from repro.core.error_feedback import QuantizedBuffer, zeros_q8
 from repro.core.projectors import Projector, rotation_matrix
 
 from .common import (
@@ -71,6 +73,9 @@ class ProjectedAdamRule(MatrixRule):
     ranking_norm: str = "l2"
     exact_rotation_matmul: bool = False   # paper-literal R via matmul
     needs_shared_basis: bool = True       # harness stores DCT bases if needed
+    fused: str = "auto"                   # fused-step dispatch (DESIGN.md §3):
+    #   "auto" (kernels on TPU, reference elsewhere) | "on" (Pallas kernels,
+    #   interpret off-TPU) | "fft" (Makhoul host fast path) | "off" (seed jnp)
 
     def _proj(self):
         return Projector(kind=self.projector, r=self.rank, norm=self.ranking_norm)
@@ -98,26 +103,50 @@ class ProjectedAdamRule(MatrixRule):
         rows, cols = gf.shape[-2], gf.shape[-1]
         r = min(self.rank, cols)
         q = ctx.basis(cols, jnp.float32) if p.needs_shared_basis else None
+        mode = fused_step.resolve(self.fused)
+        # the fused dataflow exists for the index-into-shared-basis projector;
+        # dense-basis kinds keep the reference math (EF still goes fused)
+        fused = mode != "off" and self.projector == "dct"
 
         if state.ef is not None:
-            ef_val = (dequantize_q8(state.ef) if isinstance(state.ef, QuantizedBuffer)
-                      else state.ef)
-            gf = gf + ef_val
+            gf = fused_step.ef_add(gf, state.ef, mode=mode)
 
-        def refresh(_):
-            new_proj = p.update(gf, state.proj, shared_q=q, key=ctx.key)
-            if not self.rotate:
-                return (new_proj,)
-            rot = rotation_matrix(state.proj, new_proj, p, cols, shared_q=q,
-                                  exact_matmul=self.exact_rotation_matmul)
-            return new_proj, rot
-
-        def keep(_):
-            if not self.rotate:
-                return (state.proj,)
+        def eye_rot():
             eye = jnp.eye(r, dtype=jnp.float32)
-            eye = jnp.broadcast_to(eye, (*gf.shape[:-2], r, r))
-            return state.proj, eye
+            return jnp.broadcast_to(eye, (*gf.shape[:-2], r, r))
+
+        if fused:
+            # refresh folds selection AND projection into one pass over G:
+            # g_low falls out of S (Alg. 1 line 8), so both branches return it
+            def refresh(_):
+                new_proj, g_low = fused_step.select_and_project(
+                    gf, q, r, norm=self.ranking_norm, mode=mode)
+                if not self.rotate:
+                    return new_proj, g_low
+                rot = rotation_matrix(state.proj, new_proj, p, cols,
+                                      shared_q=q,
+                                      exact_matmul=self.exact_rotation_matmul)
+                return new_proj, rot, g_low
+
+            def keep(_):
+                g_low = fused_step.project_with_indices(gf, q, state.proj)
+                if not self.rotate:
+                    return state.proj, g_low
+                return state.proj, eye_rot(), g_low
+        else:
+            def refresh(_):
+                new_proj = p.update(gf, state.proj, shared_q=q, key=ctx.key)
+                if not self.rotate:
+                    return (new_proj,)
+                rot = rotation_matrix(state.proj, new_proj, p, cols,
+                                      shared_q=q,
+                                      exact_matmul=self.exact_rotation_matmul)
+                return new_proj, rot
+
+            def keep(_):
+                if not self.rotate:
+                    return (state.proj,)
+                return state.proj, eye_rot()
 
         if self.update_interval == 1:
             out = refresh(None)
@@ -126,7 +155,10 @@ class ProjectedAdamRule(MatrixRule):
             out = jax.lax.cond(do_refresh, refresh, keep, None)
         proj_state = out[0]
 
-        g_low = p.project(gf, proj_state, shared_q=q)           # (..., rows, r)
+        if fused:
+            g_low = out[-1]                                     # (..., rows, r)
+        else:
+            g_low = p.project(gf, proj_state, shared_q=q)       # (..., rows, r)
 
         if self.rotate:
             rot = out[1]
@@ -143,13 +175,25 @@ class ProjectedAdamRule(MatrixRule):
         vhat = v / (1.0 - self.b2**t)
         u_low = mhat / (jnp.sqrt(vhat) + self.eps)
 
-        d = p.backproject(u_low, proj_state, shared_q=q, n=cols)
+        need_resid = self.residual != "discard"
+        if fused:
+            if need_resid:
+                d, recon = fused_step.fused_dual_backproject(
+                    u_low, g_low, q, proj_state, mode=mode)
+                resid = gf - recon
+            else:
+                d = fused_step.fused_backproject(u_low, q, proj_state,
+                                                 mode=mode)
+        else:
+            d = p.backproject(u_low, proj_state, shared_q=q, n=cols)
+            if need_resid:
+                resid = gf - p.backproject(g_low, proj_state, shared_q=q,
+                                           n=cols)
 
         new_ef = state.ef
-        if self.residual != "discard":
-            resid = gf - p.backproject(g_low, proj_state, shared_q=q, n=cols)
+        if need_resid:
             if self.residual == "ef":
-                new_ef = (quantize_q8(resid) if self.ef_dtype == "q8" else resid)
+                new_ef = fused_step.ef_store(resid, self.ef_dtype, mode=mode)
             elif self.residual == "sign":
                 d = d + jnp.sign(resid)                         # FRUGAL state-free
             elif self.residual == "fira":
@@ -174,8 +218,11 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
               weight_decay: float = 0.01, error_feedback: bool = True,
               ef_dtype: str = "q8", b1: float = 0.9, b2: float = 0.999,
               eps: float = 1e-8, exact_rotation_matmul: bool = False,
-              basis_mode: str = "stored", label_fn=None) -> Optimizer:
-    """The paper's DCT-AdamW (Algorithm 2)."""
+              fused: str = "auto", basis_mode: str = "stored",
+              label_fn=None) -> Optimizer:
+    """The paper's DCT-AdamW (Algorithm 2). ``fused`` selects the execution
+    layer: "auto" | "on" (Pallas kernels) | "fft" (Makhoul host fast path) |
+    "off" (jnp reference) — see core/fused_step.py / DESIGN.md §3."""
     hk = dict(weight_decay=weight_decay, basis_mode=basis_mode)
     if label_fn is not None:
         hk["label_fn"] = label_fn
@@ -183,7 +230,8 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
                            update_interval=update_interval, rotate=True,
                            residual="ef" if error_feedback else "discard",
                            ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps,
-                           exact_rotation_matmul=exact_rotation_matmul), hk)
+                           exact_rotation_matmul=exact_rotation_matmul,
+                           fused=fused), hk)
 
 
 def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
@@ -203,20 +251,21 @@ def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
 def galore(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-           label_fn=None) -> Optimizer:
+           fused: str = "auto", label_fn=None) -> Optimizer:
     """GaLore baseline: SVD every T_u steps, residual discarded, no rotation."""
     hk = dict(weight_decay=weight_decay)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
                            update_interval=update_interval, rotate=False,
-                           residual="discard", b1=b1, b2=b2, eps=eps), hk)
+                           residual="discard", b1=b1, b2=b2, eps=eps,
+                           fused=fused), hk)
 
 
 def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-           label_fn=None) -> Optimizer:
+           fused: str = "auto", label_fn=None) -> Optimizer:
     """FRUGAL baseline: state-full low-rank AdamW + state-free SignSGD on the
     residual. ``projector`` in {svd, dct, random, randperm} (paper Table 6)."""
     hk = dict(weight_decay=weight_decay)
@@ -224,17 +273,19 @@ def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
                            update_interval=update_interval, rotate=False,
-                           residual="sign", b1=b1, b2=b2, eps=eps), hk)
+                           residual="sign", b1=b1, b2=b2, eps=eps,
+                           fused=fused), hk)
 
 
 def fira(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
          weight_decay: float = 0.01, projector: str = "svd",
          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-         label_fn=None) -> Optimizer:
+         fused: str = "auto", label_fn=None) -> Optimizer:
     """FIRA baseline: low-rank AdamW + norm-scaled full-rank residual."""
     hk = dict(weight_decay=weight_decay)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
                            update_interval=update_interval, rotate=False,
-                           residual="fira", b1=b1, b2=b2, eps=eps), hk)
+                           residual="fira", b1=b1, b2=b2, eps=eps,
+                           fused=fused), hk)

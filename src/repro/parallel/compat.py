@@ -1,0 +1,89 @@
+"""jax version compatibility shims for the mesh/sharding APIs.
+
+The repo targets the current jax mesh API (``jax.set_mesh`` /
+``jax.sharding.get_abstract_mesh`` / ``AxisType``); older releases (<= 0.4.x,
+the version baked into this container) expose none of those. Every call site
+goes through this module so the rest of the codebase can be written against
+one API:
+
+  * ``set_mesh(mesh)``          — context manager. New jax: ``jax.set_mesh``
+    (installs the abstract mesh). Old jax: the legacy ``with mesh:`` context,
+    which installs the physical mesh in ``thread_resources`` — equivalent for
+    our purposes (``with_sharding_constraint`` by PartitionSpec, and
+    ``active_mesh()`` below reads both).
+  * ``get_active_mesh()``       — the mesh installed by ``set_mesh``, or None.
+  * ``make_mesh(shape, axes)``  — ``jax.make_mesh`` with ``axis_types`` only
+    when the running jax supports it.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+
+def set_mesh(mesh):
+    """Install ``mesh`` for the duration of a ``with`` block."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    # legacy context manager: Mesh.__enter__ sets thread_resources
+    return _legacy_mesh_ctx(mesh)
+
+
+@contextlib.contextmanager
+def _legacy_mesh_ctx(mesh):
+    with mesh:
+        yield mesh
+
+
+def get_active_mesh():
+    """The currently installed mesh (abstract or physical), or None."""
+    if _HAS_ABSTRACT_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    # legacy thread-resources physical mesh (``with mesh:``)
+    try:
+        env = jax._src.mesh.thread_resources.env
+        pm = env.physical_mesh
+    except AttributeError:
+        return None
+    if pm is None or pm.empty or not pm.axis_names:
+        return None
+    return pm
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict.
+
+    Old jax returns a one-element list of per-module dicts; current jax
+    returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel import compat
+
 DP_AXES = ("pod", "data")   # batch/FSDP axes (present subset is used)
 TP_AXIS = "model"
 
@@ -55,10 +57,7 @@ def seq_parallel() -> bool:
 
 
 def active_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or not m.axis_names:
-        return None
-    return m
+    return compat.get_active_mesh()
 
 
 def dp_axes(mesh=None) -> tuple[str, ...]:

@@ -176,9 +176,11 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      n_devices: int, model_flops_total: float,
                      tp_degree: int = 16, compile_s: float = 0.0
                      ) -> RooflineReport:
+    from repro.parallel import compat
+
     from .hlo_cost import module_costs
 
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     txt = compiled.as_text()
     # primary: our trip-count-aware, dtype-correct walker (XLA's analysis
     # counts scan bodies once and the CPU backend pads bf16 with fp32

@@ -69,6 +69,72 @@ def test_colgather_matmul_matches_ref(m, n, r, dtype):
 
 
 # ---------------------------------------------------------------------------
+# batched (stacked-layer) kernel paths + fused dual back-projection
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("batch", [(3,), (2, 2)])
+def test_dct_project_batched_matches_per_layer(batch):
+    g = _rand((*batch, 40, 48), jnp.float32, seed=11)
+    q = dct2_matrix(48)
+    s, norms = dct_project(g, q, block=(32, 32, 32), interpret=True)
+    assert s.shape == g.shape and norms.shape == (*batch, 48)
+    gs = g.reshape((-1, 40, 48))
+    for li in range(gs.shape[0]):
+        s_l, n_l = dct_project(gs[li], q, block=(32, 32, 32), interpret=True)
+        np.testing.assert_allclose(np.asarray(s.reshape((-1, 40, 48))[li]),
+                                   np.asarray(s_l), atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(norms.reshape((-1, 48))[li]),
+                                   np.asarray(n_l), rtol=2e-5, atol=1e-4)
+
+
+def test_colgather_matmul_batched_per_layer_indices():
+    L, m, n, r = 3, 50, 64, 8
+    b = _rand((L, m, r), jnp.float32, seed=5)
+    qt = jnp.asarray(np.asarray(dct2_matrix(n)).T)
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(np.stack([np.sort(rng.choice(n, r, replace=False))
+                                for _ in range(L)])).astype(jnp.int32)
+    out = colgather_matmul(b, qt, idx, block=(32, 32), interpret=True)
+    out_ref = ref.colgather_matmul_ref(b, qt, idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(64, 96), (3, 50, 96)])
+def test_colgather_matmul_dual_matches_two_singles(shape):
+    from repro.kernels.colgather_matmul import colgather_matmul_dual
+
+    *batch, m, n = shape
+    r = 8
+    b1 = _rand((*batch, m, r), jnp.float32, seed=1)
+    b2 = _rand((*batch, m, r), jnp.float32, seed=2)
+    qt = jnp.asarray(np.asarray(dct2_matrix(n)).T)
+    rng = np.random.default_rng(3)
+    idx = jnp.asarray(np.sort(rng.choice(n, (*batch, r), replace=True),
+                              axis=-1)).astype(jnp.int32)
+    o1, o2 = colgather_matmul_dual(b1, b2, qt, idx, block=(32, 32),
+                                   interpret=True)
+    s1 = colgather_matmul(b1, qt, idx, block=(32, 32), interpret=True)
+    s2 = colgather_matmul(b2, qt, idx, block=(32, 32), interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(s1), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(s2), atol=1e-6)
+
+
+def test_quant_ef_batched_roundtrip():
+    x = _rand((3, 40, 32), jnp.float32, seed=13, scale=4.0)
+    q, scale = quantize_ef(x, bm=16, interpret=True)
+    assert q.shape == x.shape and scale.shape == (3, 40, 1)
+    q_ref, scale_ref = ref.quantize_ef_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(scale_ref),
+                               rtol=1e-6)
+    g = _rand((3, 40, 32), jnp.float32, seed=14)
+    out = dequant_add_ef(g, q, scale, bm=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.dequant_add_ef_ref(g, q, scale)),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # newton_schulz: fused iteration + full orthogonalization
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("r,m", [(8, 64), (16, 128), (16, 100)])

@@ -8,6 +8,9 @@ Invariants under test:
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dct import dct2_matrix, dct_basis_np
