@@ -93,23 +93,68 @@ def train(cfg, optimizer_name: str, steps: int = 40, *, seq: int = 64,
 # ---------------------------------------------------------------------------
 # optimizer-step microbench: fused execution layer vs seed reference path
 # ---------------------------------------------------------------------------
-def _time_rule_step(rule, shape, *, steps: int, warmup: int, seed: int = 0):
-    """Wall-time per ``rule.update`` call on one stacked leaf + peak live
-    bytes of the compiled step (args + outputs + temps - donated aliases)."""
-    from repro.optim.common import Context
+class _DispatchSpy:
+    """Counts fused-execution entry points reached while *tracing* the step.
 
-    dim = shape[-1]
-    basis = {str(dim): dct2_matrix(dim, jnp.float32)}
-    g = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
-    param = jnp.zeros(shape, jnp.float32)
+    The bench drives the full chain API (partition -> lowrank_project ->
+    rule), so if a refactor breaks dispatch — fused kernels no longer
+    reached through ``partition`` — the counters stay zero and
+    ``check`` raises, failing the CI bench job."""
 
-    def step(g, state, t):
-        ctx = Context(step=t, bases=basis, key=jax.random.PRNGKey(1))
-        return rule.update(g, state, param, ctx)
+    def __init__(self):
+        self.counts = {"select_and_project": 0, "kernel": 0}
 
-    state = rule.init(shape, jnp.float32)
-    t0 = jnp.ones((), jnp.int32)
-    compiled = jax.jit(step, donate_argnums=(1,)).lower(g, state, t0).compile()
+    def __enter__(self):
+        from repro.core import fused_step
+        from repro.kernels import ops as kops
+
+        self._fs, self._kops = fused_step, kops
+        self._orig_sp = fused_step.select_and_project
+        self._orig_op = kops.dct_project_op
+
+        def sp(*a, **kw):
+            self.counts["select_and_project"] += 1
+            return self._orig_sp(*a, **kw)
+
+        def op(*a, **kw):
+            self.counts["kernel"] += 1
+            return self._orig_op(*a, **kw)
+
+        fused_step.select_and_project = sp
+        kops.dct_project_op = op
+        return self
+
+    def __exit__(self, *exc):
+        self._fs.select_and_project = self._orig_sp
+        self._kops.dct_project_op = self._orig_op
+        return False
+
+    def check(self, mode: str):
+        if mode != "off" and not self.counts["select_and_project"]:
+            raise RuntimeError(
+                f"fused mode {mode!r} never reached select_and_project "
+                f"through the chain API — dispatch regression")
+        if mode == "on" and not self.counts["kernel"]:
+            raise RuntimeError(
+                "fused mode 'on' never reached the Pallas dct_project "
+                "kernel through the chain API — dispatch regression")
+
+
+def _time_opt_step(rule, shape, *, steps: int, warmup: int, seed: int = 0):
+    """Wall-time per full ``optimizer.update`` on one stacked lowrank leaf,
+    driven through the chain API (partition -> lowrank_project(rule)), plus
+    peak live bytes of the compiled step (args + outputs + temps - donated
+    aliases). Returns the kernel-dispatch counters observed at trace time."""
+    from repro.optim.transform import matrix_optimizer
+
+    params = {"w": jnp.zeros(shape, jnp.float32)}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                    jnp.float32)}
+    opt = matrix_optimizer(rule, 1e-3)
+    state = opt.init(params)
+    with _DispatchSpy() as spy:
+        compiled = jax.jit(opt.update, donate_argnums=1).lower(
+            grads, state, params).compile()
     mem = compiled.memory_analysis()
     peak = None
     if mem is not None:
@@ -117,16 +162,16 @@ def _time_rule_step(rule, shape, *, steps: int, warmup: int, seed: int = 0):
                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
 
     times = []
-    for i in range(warmup + steps):
-        t = jnp.asarray(i + 1, jnp.int32)
+    for _ in range(warmup + steps):
         tic = time.perf_counter()
-        d, state = compiled(g, state, t)
+        d, state = compiled(grads, state, params)
         jax.block_until_ready(d)
         times.append(time.perf_counter() - tic)
     return {
         "s_per_step": sum(times[warmup:]) / max(steps, 1),
         "peak_live_bytes": peak,
-    }
+        "dispatch": dict(spy.counts),
+    }, spy
 
 
 def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
@@ -134,8 +179,10 @@ def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
                          out_path: str | None = "BENCH_optimizer_step.json",
                          ) -> dict:
     """Fused vs reference DCT-AdamW step on a stacked (layers, dim, dim)
-    leaf. The fused mode is the host-appropriate one: Pallas kernels on TPU,
-    the Makhoul fft dataflow elsewhere (DESIGN.md §3)."""
+    leaf, driven end-to-end through the chain API. The fused mode is the
+    host-appropriate one: Pallas kernels on TPU, the Makhoul fft dataflow
+    elsewhere (DESIGN.md §3). Raises if the fused execution layer is no
+    longer reached through ``partition`` (dispatch regression)."""
     import dataclasses
 
     from repro.kernels import ops as kops
@@ -147,6 +194,7 @@ def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
     fused_mode = "on" if kops.ON_TPU else "fft"
     result = {
         "bench": "optimizer_step",
+        "api": "chain",
         "leaf_shape": list(shape),
         "rank": rank,
         "steps_timed": steps,
@@ -155,7 +203,8 @@ def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
     }
     for label, mode in (("reference", "off"), ("fused", fused_mode)):
         rule = dataclasses.replace(base, fused=mode)
-        row = _time_rule_step(rule, shape, steps=steps, warmup=warmup)
+        row, spy = _time_opt_step(rule, shape, steps=steps, warmup=warmup)
+        spy.check(mode)
         row["fused_mode"] = mode
         result["modes"][label] = row
         print(f"[optimizer_step] {label:10s} ({mode:3s}) "

@@ -1,16 +1,22 @@
-"""Quickstart: train a tiny Llama with the paper's Trion optimizer.
+"""Quickstart: train a tiny Llama with the paper's Trion optimizer, built
+from the composable gradient-transform API (DESIGN.md §4).
 
   PYTHONPATH=src python examples/quickstart.py
 
-Shows the whole public API in ~30 lines: config -> params -> optimizer ->
-jit'd train step -> loss goes down.
+Every preset (``get_optimizer("trion", ...)``) is exactly a chain like the
+one below: ``partition`` routes linear-layer matrices to the low-rank rule
+and everything else (embeddings, norms, biases) to full-rank Adam, then
+lr scaling and weight decay apply to the merged updates.
+``inject_hyperparams`` turns the floats into state leaves — the printed
+mid-run LR drop changes the step size *without retracing*.
 """
 import jax
 import jax.numpy as jnp
 
 from repro.data.synthetic import SyntheticLM
 from repro.models.config import ModelConfig
-from repro.optim.api import get_optimizer
+from repro.optim import transform as tx
+from repro.optim.trion import TrionRule
 from repro.train.steps import init_state, make_train_step
 
 cfg = ModelConfig(
@@ -18,13 +24,27 @@ cfg = ModelConfig(
     d_ff=344, vocab_size=512, schedule=((("attn",), 4),),
     param_dtype="float32", compute_dtype="float32", remat=False)
 
-opt = get_optimizer("trion", lr=3e-3, rank=32)       # the paper's optimizer
+# the paper's optimizer as an explicit chain (== get_optimizer("trion", ...))
+trion_chain = tx.inject_hyperparams(lambda lr, weight_decay: tx.chain(
+    tx.partition({"lowrank": tx.lowrank_project(TrionRule(rank=32)),
+                  "full": tx.scale_by_adam()}),
+    tx.scale_by_learning_rate(lr),
+    tx.add_decayed_weights(weight_decay, schedule=lr),
+))(lr=3e-3, weight_decay=0.01)
+opt = tx.as_optimizer(trion_chain)
+
 state = init_state(cfg, opt, jax.random.PRNGKey(0))
 step = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
 
 data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
 first = None
 for i in range(60):
+    if i == 40:  # mid-run LR surgery: edit the state leaf, no recompile
+        hp = dict(state.opt_state.leaves.hyperparams)
+        hp["lr"] = jnp.asarray(1e-3, jnp.float32)
+        state = state._replace(opt_state=state.opt_state._replace(
+            leaves=state.opt_state.leaves._replace(hyperparams=hp)))
+        print("        (lr -> 1e-3, no retrace)")
     state, metrics = step(state, data.batch(jnp.int32(i)))
     loss = float(metrics["ce"])
     first = first if first is not None else loss

@@ -19,12 +19,19 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: reduced config, 20 steps")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
     args = ap.parse_args()
+    steps = 20 if args.smoke else args.steps
     argv = ["--arch", "llama-30m", "--optimizer", "trion", "--rank", "64",
-            "--steps", str(args.steps), "--ckpt-dir", args.ckpt_dir,
-            "--ckpt-every", "50", "--log-every", "10"]
-    if args.paper_scale:
+            "--steps", str(steps), "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "50" if not args.smoke else "10",
+            "--log-every", "10"]
+    if args.smoke:
+        # llama-30m is already the CPU-sized paper model; just shrink the run
+        argv += ["--seq-len", "64", "--batch", "4"]
+    elif args.paper_scale:
         argv += ["--seq-len", "512", "--batch", "64"]
     else:
         argv += ["--seq-len", "128", "--batch", "8"]

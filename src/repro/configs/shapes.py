@@ -36,7 +36,7 @@ def skip_reason(cfg, shape_name: str) -> str | None:
     spec = SHAPES[shape_name]
     if spec.name == "long_500k" and not cfg.supports_long_context:
         return ("pure full-attention arch: no sub-quadratic path at 524k "
-                "context (skip noted in DESIGN.md §4)")
+                "context (skip noted in DESIGN.md §6)")
     return None
 
 

@@ -29,6 +29,9 @@ def build(argv=None):
     ap.add_argument("--rank", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--weight-decay", type=float, default=0.01)
+    ap.add_argument("--fused", default=None,
+                    choices=["auto", "on", "fft", "off"],
+                    help="fused-step dispatch for the projected-Adam family")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--seq-len", type=int, default=512)
@@ -61,6 +64,14 @@ def main(argv=None) -> int:
     opt_kw = {"weight_decay": args.weight_decay}
     if args.optimizer != "adamw":
         opt_kw["rank"] = args.rank
+    if args.fused is not None:
+        if args.optimizer not in ("dct_adamw", "ldadamw", "galore",
+                                  "frugal", "fira"):
+            raise SystemExit(f"--fused applies to the projected-Adam family "
+                             f"only, not {args.optimizer!r}")
+        opt_kw["fused"] = args.fused
+    # each preset is a thin chain (partition -> rule / adam fallback ->
+    # lr/decay); get_optimizer validates kwargs eagerly with the allowed set
     opt = get_optimizer(args.optimizer, lr=lr, **opt_kw)
 
     step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)

@@ -1,16 +1,39 @@
 """Low-rank adaptive optimizers: the paper's Trion & DCT-AdamW plus every
 baseline it compares against (Dion, Muon, GaLore, LDAdamW, FRUGAL, FIRA,
-full-rank AdamW)."""
-from .adamw import adamw
-from .api import OPTIMIZERS, get_optimizer
+full-rank AdamW), built from the composable gradient-transform API
+(``transform.chain`` / ``partition`` / ``inject_hyperparams``)."""
+from .adamw import adamw, adamw_transform
+from .api import OPTIMIZERS, TRANSFORMS, get_optimizer, get_transform
 from .common import Optimizer, apply_updates
-from .dion import dion
-from .muon import muon
-from .projected_adam import dct_adamw, fira, frugal, galore, ldadamw
-from .trion import trion
+from .dion import dion, dion_transform
+from .muon import muon, muon_transform
+from .projected_adam import dct_adamw, dct_adamw_transform, fira, frugal, galore, ldadamw
+from .transform import (
+    ChainState,
+    GradientTransform,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    clip_global_norm,
+    inject_hyperparams,
+    lowrank_project,
+    matrix_optimizer,
+    partition,
+    scale_by_adam,
+    scale_by_learning_rate,
+    scale_by_schedule,
+)
+from .trion import trion, trion_transform
 
 __all__ = [
-    "OPTIMIZERS", "get_optimizer", "Optimizer", "apply_updates",
+    "OPTIMIZERS", "TRANSFORMS", "get_optimizer", "get_transform",
+    "Optimizer", "apply_updates",
     "adamw", "muon", "dion", "trion", "dct_adamw", "ldadamw",
     "galore", "frugal", "fira",
+    "adamw_transform", "muon_transform", "dion_transform", "trion_transform",
+    "dct_adamw_transform",
+    "GradientTransform", "ChainState", "chain", "partition",
+    "inject_hyperparams", "as_optimizer", "matrix_optimizer",
+    "lowrank_project", "scale_by_adam", "scale_by_learning_rate",
+    "scale_by_schedule", "add_decayed_weights", "clip_global_norm",
 ]

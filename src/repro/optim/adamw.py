@@ -1,45 +1,34 @@
-"""Full-rank AdamW — the paper's reference optimizer."""
+"""Full-rank AdamW — the paper's reference optimizer, as a transform chain.
+
+``adamw_transform`` is the composable building block (usable inside
+``partition`` or ``inject_hyperparams``); ``adamw`` closes it into the
+legacy ``Optimizer(init, update)`` interface.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from .common import (
-    AdamMoments,
-    FullAdamLeaf,
-    HarnessState,
-    Optimizer,
-    Schedule,
-    adam_update,
-    sched_value,
+from .common import Optimizer, Schedule
+from .transform import (
+    GradientTransform,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    scale_by_adam,
+    scale_by_learning_rate,
 )
+
+
+def adamw_transform(lr: Schedule, *, weight_decay: float = 0.01,
+                    b1: float = 0.9, b2: float = 0.999,
+                    eps: float = 1e-8) -> GradientTransform:
+    """Adam direction -> -lr scaling -> decoupled weight decay."""
+    return chain(
+        scale_by_adam(b1, b2, eps),
+        scale_by_learning_rate(lr),
+        add_decayed_weights(weight_decay, schedule=lr),
+    )
 
 
 def adamw(lr: Schedule, *, weight_decay: float = 0.01, b1: float = 0.9,
           b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
-    def init(params):
-        leaves = jax.tree.map(
-            lambda p: FullAdamLeaf(AdamMoments(jnp.zeros(p.shape, jnp.float32),
-                                               jnp.zeros(p.shape, jnp.float32))),
-            params,
-        )
-        return HarnessState(step=jnp.zeros((), jnp.int32),
-                            key=jax.random.PRNGKey(0), bases={}, leaves=leaves)
-
-    def update(grads, state, params):
-        step = state.step + 1
-        lr_t = sched_value(lr, step)
-
-        def leaf(g, s, p):
-            d, mom = adam_update(g, s.mom, step, b1, b2, eps)
-            return (-lr_t * d - lr_t * weight_decay * p.astype(jnp.float32),
-                    FullAdamLeaf(mom))
-
-        # flatten state/params "up to" the grads structure, then unzip pairs
-        pairs = jax.tree.map(leaf, grads, state.leaves, params)
-        updates = jax.tree.map(lambda _, pr: pr[0], grads, pairs)
-        leaves = jax.tree.map(lambda _, pr: pr[1], grads, pairs)
-        return updates, HarnessState(step=step, key=state.key, bases={},
-                                     leaves=leaves)
-
-    return Optimizer(init=init, update=update)
+    return as_optimizer(adamw_transform(lr, weight_decay=weight_decay,
+                                        b1=b1, b2=b2, eps=eps))

@@ -1,12 +1,28 @@
-"""Optimizer registry — `get_optimizer(name, lr, **kw)`."""
+"""Optimizer registry — `get_optimizer(name, lr, **kw)`.
+
+Every preset here is a thin wrapper over the composable transform chains
+in :mod:`repro.optim.transform` (DESIGN.md §4). ``TRANSFORMS`` exposes the
+matching *transform-level* factories (``GradientTransform`` builders) for
+composition: route them through ``partition`` for per-group policies or
+wrap them in ``inject_hyperparams`` for runtime hyperparameter control.
+"""
 from __future__ import annotations
 
-from .adamw import adamw
+import inspect
+
+from .adamw import adamw, adamw_transform
 from .common import Optimizer, Schedule, apply_updates
-from .dion import dion
-from .muon import muon
-from .projected_adam import dct_adamw, fira, frugal, galore, ldadamw
-from .trion import trion
+from .dion import dion, dion_transform
+from .muon import muon, muon_transform
+from .projected_adam import (
+    dct_adamw,
+    dct_adamw_transform,
+    fira,
+    frugal,
+    galore,
+    ldadamw,
+)
+from .trion import trion, trion_transform
 
 OPTIMIZERS = {
     "adamw": adamw,
@@ -20,8 +36,42 @@ OPTIMIZERS = {
     "fira": fira,
 }
 
+# transform-level factories (matrix-leaf pipelines for the matrix rules,
+# whole-tree for adamw) — the building blocks for partition/inject
+TRANSFORMS = {
+    "adamw": adamw_transform,
+    "muon": muon_transform,
+    "dion": dion_transform,
+    "trion": trion_transform,
+    "dct_adamw": dct_adamw_transform,
+}
+
+
+def _validate_kwargs(name: str, fn, kw: dict) -> None:
+    """Reject unknown kwargs eagerly with the allowed set in the message
+    (every preset has an explicit keyword-only signature)."""
+    params = inspect.signature(fn).parameters
+    if any(p.kind == inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return
+    allowed = sorted(p for p in params if p != "lr")
+    unknown = sorted(set(kw) - set(allowed))
+    if unknown:
+        raise TypeError(f"{name!r} got unknown kwargs {unknown}; "
+                        f"allowed: {allowed}")
+
 
 def get_optimizer(name: str, lr: Schedule, **kw) -> Optimizer:
     if name not in OPTIMIZERS:
         raise KeyError(f"unknown optimizer {name!r}; have {sorted(OPTIMIZERS)}")
-    return OPTIMIZERS[name](lr, **kw)
+    fn = OPTIMIZERS[name]
+    _validate_kwargs(name, fn, kw)
+    return fn(lr, **kw)
+
+
+def get_transform(name: str, lr: Schedule, **kw):
+    """Transform-level counterpart of ``get_optimizer`` for composition."""
+    if name not in TRANSFORMS:
+        raise KeyError(f"unknown transform {name!r}; have {sorted(TRANSFORMS)}")
+    fn = TRANSFORMS[name]
+    _validate_kwargs(name, fn, kw)
+    return fn(lr, **kw)

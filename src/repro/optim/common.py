@@ -1,14 +1,21 @@
 """Shared optimizer framework.
 
-Optax-style ``Optimizer(init, update)`` pairs, with a *matrix-optimizer
-harness* that routes each parameter leaf to either a low-rank matrix rule
-(the paper's subject) or a full-rank AdamW fallback (embeddings, norms,
-biases — standard GaLore/LDAdamW practice).
+Optax-style ``Optimizer(init, update)`` pairs plus the shared vocabulary of
+the optimizer layer: leaf routing (``default_label_fn``), matrix
+orientation, Adam moments, the per-leaf :class:`MatrixRule` protocol and
+the :class:`Context` that carries step / shared DCT bases / PRNG key.
 
 Matrix leaves may carry leading stacked axes — ``(layers, m, n)`` or
 ``(layers, experts, m, n)`` from scan-stacked models — and every rule
 broadcasts over them, which is how "per-layer column indices" fall out for
 free: the index state gets shape ``(layers, ..., r)``.
+
+The monolithic ``make_matrix_optimizer`` harness at the bottom is the
+*legacy reference implementation*: the live presets are built from the
+composable transform chains in :mod:`repro.optim.transform`
+(``chain`` / ``partition`` / ``inject_hyperparams`` — DESIGN.md §4), and
+the harness is retained so tests/test_transform_api.py can pin the chains
+bit-for-bit against the pre-refactor behaviour.
 """
 from __future__ import annotations
 
@@ -161,7 +168,12 @@ def make_matrix_optimizer(
     seed: int = 0,
     fullrank_weight_decay: bool = True,
 ) -> Optimizer:
-    """Wrap a MatrixRule into a full-model optimizer with AdamW fallback."""
+    """Wrap a MatrixRule into a full-model optimizer with AdamW fallback.
+
+    Legacy reference implementation — the live presets are the equivalent
+    transform chains built by ``transform.matrix_optimizer``; the parity
+    suite pins the two bit-for-bit.
+    """
 
     def init(params):
         labels = labelled_tree(params, label_fn)
@@ -198,14 +210,14 @@ def make_matrix_optimizer(
         labels = labelled_tree(params, label_fn)
         key = jax.random.fold_in(state.key, step)
 
-        flat_lbl = jax.tree.leaves(labels, is_leaf=lambda x: isinstance(x, str))
-        leaf_ids = iter(range(len(flat_lbl)))
-
-        def leaf_update(lbl, g, s, p):
-            i = next(leaf_ids)
+        def leaf_update(kp, lbl, g, s, p):
             if lbl == "lowrank":
+                # per-leaf key: stable hash of the tree path, NOT flat
+                # enumeration order — inserting/removing a parameter leaves
+                # every other leaf's randomness unchanged
+                from .transform import leaf_key
                 ctx = Context(step=step, bases=state.bases,
-                              key=jax.random.fold_in(key, i))
+                              key=leaf_key(key, path_str(kp)))
                 d, new_s = rule.update(g, s, p, ctx)
                 upd = -lr_t * d.astype(jnp.float32)
                 upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
@@ -216,7 +228,7 @@ def make_matrix_optimizer(
                 upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
             return upd, FullAdamLeaf(mom)
 
-        pairs = jax.tree.map(
+        pairs = jax.tree_util.tree_map_with_path(
             leaf_update, labels, grads, state.leaves, params,
             is_leaf=lambda x: isinstance(x, str),
         )

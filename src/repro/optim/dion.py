@@ -21,7 +21,15 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .common import MatrixRule, Optimizer, Schedule, deorient, make_matrix_optimizer, orient_right
+from .common import MatrixRule, Optimizer, Schedule, deorient, orient_right
+from .transform import (
+    GradientTransform,
+    add_decayed_weights,
+    chain,
+    lowrank_project,
+    matrix_optimizer,
+    scale_by_learning_rate,
+)
 
 
 class DionLeaf(NamedTuple):
@@ -65,10 +73,19 @@ class DionRule(MatrixRule):
         return d, DionLeaf(m=deorient(new_m, transposed), q=q_t)
 
 
-def dion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
-         weight_decay: float = 0.01, label_fn=None, **adam_kw) -> Optimizer:
+def dion_transform(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
+                   weight_decay: float = 0.01) -> GradientTransform:
+    """Matrix-leaf Dion pipeline for ``partition`` / ``inject_hyperparams``."""
     rule = DionRule(rank=rank, mu=mu)
-    kw = dict(weight_decay=weight_decay, **adam_kw)
+    return chain(lowrank_project(rule), scale_by_learning_rate(lr),
+                 add_decayed_weights(weight_decay, schedule=lr))
+
+
+def dion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
+         weight_decay: float = 0.01, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, label_fn=None) -> Optimizer:
+    rule = DionRule(rank=rank, mu=mu)
+    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps)
     if label_fn is not None:
         kw["label_fn"] = label_fn
-    return make_matrix_optimizer(rule, lr, **kw)
+    return matrix_optimizer(rule, lr, **kw)

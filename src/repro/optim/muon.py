@@ -12,7 +12,15 @@ import jax.numpy as jnp
 
 from repro.core.newton_schulz import newton_schulz
 
-from .common import MatrixRule, Optimizer, Schedule, make_matrix_optimizer
+from .common import MatrixRule, Optimizer, Schedule
+from .transform import (
+    GradientTransform,
+    add_decayed_weights,
+    chain,
+    lowrank_project,
+    matrix_optimizer,
+    scale_by_learning_rate,
+)
 
 
 class MuonLeaf(NamedTuple):
@@ -39,11 +47,21 @@ class MuonRule(MatrixRule):
         return scale * o, MuonLeaf(m=new_m)
 
 
-def muon(lr: Schedule, *, mu: float = 0.95, weight_decay: float = 0.01,
-         ns_steps: int = 5, nesterov: bool = True, label_fn=None,
-         **adam_kw) -> Optimizer:
+def muon_transform(lr: Schedule, *, mu: float = 0.95,
+                   weight_decay: float = 0.01, ns_steps: int = 5,
+                   nesterov: bool = True) -> GradientTransform:
+    """Matrix-leaf Muon pipeline (orthogonalize -> -lr -> decay) for use
+    inside ``partition`` / ``inject_hyperparams``."""
     rule = MuonRule(mu=mu, ns_steps=ns_steps, nesterov=nesterov)
-    kw = dict(weight_decay=weight_decay, **adam_kw)
+    return chain(lowrank_project(rule), scale_by_learning_rate(lr),
+                 add_decayed_weights(weight_decay, schedule=lr))
+
+
+def muon(lr: Schedule, *, mu: float = 0.95, weight_decay: float = 0.01,
+         ns_steps: int = 5, nesterov: bool = True, b1: float = 0.9,
+         b2: float = 0.999, eps: float = 1e-8, label_fn=None) -> Optimizer:
+    rule = MuonRule(mu=mu, ns_steps=ns_steps, nesterov=nesterov)
+    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps)
     if label_fn is not None:
         kw["label_fn"] = label_fn
-    return make_matrix_optimizer(rule, lr, **kw)
+    return matrix_optimizer(rule, lr, **kw)

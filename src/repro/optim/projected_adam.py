@@ -38,17 +38,28 @@ import jax.numpy as jnp
 
 from repro.core import fused_step
 from repro.core.error_feedback import QuantizedBuffer, zeros_q8
-from repro.core.projectors import Projector, rotation_matrix
+from repro.core.projectors import PROJECTOR_KINDS, Projector, rotation_matrix
 
 from .common import (
     MatrixRule,
     Optimizer,
     Schedule,
     deorient,
-    make_matrix_optimizer,
     orient_right,
     oriented_dims,
 )
+from .transform import (
+    GradientTransform,
+    add_decayed_weights,
+    chain,
+    lowrank_project,
+    matrix_optimizer,
+    scale_by_learning_rate,
+)
+
+RESIDUAL_MODES = ("ef", "discard", "sign", "fira")
+EF_DTYPES = ("q8", "fp32")
+RANKING_NORMS = ("l1", "l2")
 
 
 class ProjAdamLeaf(NamedTuple):
@@ -76,6 +87,26 @@ class ProjectedAdamRule(MatrixRule):
     fused: str = "auto"                   # fused-step dispatch (DESIGN.md §3):
     #   "auto" (kernels on TPU, reference elsewhere) | "on" (Pallas kernels,
     #   interpret off-TPU) | "fft" (Makhoul host fast path) | "off" (seed jnp)
+
+    def __post_init__(self):
+        """Eager config validation: fail at construction with the allowed
+        values, not deep inside the jit trace. Only static (string/int)
+        fields are checked so floats may be tracers (inject_hyperparams)."""
+        def check(name, value, allowed):
+            if value not in allowed:
+                raise ValueError(f"{type(self).__name__}: unknown {name} "
+                                 f"{value!r}; allowed: {allowed}")
+
+        check("projector", self.projector, PROJECTOR_KINDS)
+        check("residual", self.residual, RESIDUAL_MODES)
+        check("ef_dtype", self.ef_dtype, EF_DTYPES)
+        check("ranking_norm", self.ranking_norm, RANKING_NORMS)
+        check("fused", self.fused, fused_step.FUSED_MODES)
+        if isinstance(self.rank, int) and self.rank < 1:
+            raise ValueError(f"rank must be >= 1, got {self.rank}")
+        if isinstance(self.update_interval, int) and self.update_interval < 1:
+            raise ValueError(
+                f"update_interval must be >= 1, got {self.update_interval}")
 
     def _proj(self):
         return Projector(kind=self.projector, r=self.rank, norm=self.ranking_norm)
@@ -207,11 +238,36 @@ class ProjectedAdamRule(MatrixRule):
                                inner_step=inner)
 
 
-def _build(lr, rule_kw, harness_kw) -> Optimizer:
+def _rule(rule_kw) -> ProjectedAdamRule:
     rule_kw.setdefault("needs_shared_basis", rule_kw.get("projector") == "dct")
-    rule = ProjectedAdamRule(**rule_kw)
-    return make_matrix_optimizer(rule, lr, b1=rule.b1, b2=rule.b2, eps=rule.eps,
-                                 **harness_kw)
+    return ProjectedAdamRule(**rule_kw)
+
+
+def _build(lr, rule_kw, harness_kw) -> Optimizer:
+    rule = _rule(rule_kw)
+    return matrix_optimizer(rule, lr, b1=rule.b1, b2=rule.b2, eps=rule.eps,
+                            **harness_kw)
+
+
+def projected_adam_transform(rule: ProjectedAdamRule, lr: Schedule, *,
+                             weight_decay: float = 0.0) -> GradientTransform:
+    """Matrix-leaf projected-Adam pipeline (rule -> -lr -> decay) for use
+    inside ``partition`` (e.g. dct-adamw-on-attention + muon-on-mlp)."""
+    return chain(lowrank_project(rule), scale_by_learning_rate(lr),
+                 add_decayed_weights(weight_decay, schedule=lr))
+
+
+def dct_adamw_transform(lr: Schedule, *, rank: int = 128,
+                        update_interval: int = 1, weight_decay: float = 0.01,
+                        error_feedback: bool = True, ef_dtype: str = "q8",
+                        b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                        fused: str = "auto") -> GradientTransform:
+    """Matrix-leaf DCT-AdamW pipeline for ``partition``/``inject_hyperparams``."""
+    rule = _rule(dict(rank=rank, projector="dct",
+                      update_interval=update_interval, rotate=True,
+                      residual="ef" if error_feedback else "discard",
+                      ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps, fused=fused))
+    return projected_adam_transform(rule, lr, weight_decay=weight_decay)
 
 
 def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
@@ -236,16 +292,19 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
 
 def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
             error_feedback: bool = True, b1: float = 0.9, b2: float = 0.999,
-            eps: float = 1e-8, label_fn=None) -> Optimizer:
+            eps: float = 1e-8, fused: str = "auto", label_fn=None) -> Optimizer:
     """LDAdamW baseline: block power iteration, per-step subspace, rotation
-    via real r x r matmul of two stored projection matrices."""
+    via real r x r matmul of two stored projection matrices. ``fused``
+    covers the EF quantize/dequant kernels (the power projector itself
+    keeps the reference math)."""
     hk = dict(weight_decay=weight_decay)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector="power", update_interval=1,
                            rotate=True,
                            residual="ef" if error_feedback else "discard",
-                           ef_dtype="fp32", b1=b1, b2=b2, eps=eps), hk)
+                           ef_dtype="fp32", b1=b1, b2=b2, eps=eps,
+                           fused=fused), hk)
 
 
 def galore(lr: Schedule, *, rank: int = 128, update_interval: int = 200,

@@ -28,7 +28,18 @@ from repro.core.dct import makhoul_dct2
 from repro.core.newton_schulz import newton_schulz
 from repro.core.selection import back_project, dynamic_column_selection
 
-from .common import MatrixRule, Optimizer, Schedule, deorient, make_matrix_optimizer, orient_right
+from .common import MatrixRule, Optimizer, Schedule, deorient, orient_right
+from .transform import (
+    GradientTransform,
+    add_decayed_weights,
+    chain,
+    lowrank_project,
+    matrix_optimizer,
+    scale_by_learning_rate,
+)
+
+_RANKING_NORMS = ("l1", "l2")
+_DCT_METHODS = ("matmul", "fft")
 
 
 class TrionLeaf(NamedTuple):
@@ -44,6 +55,18 @@ class TrionRule(MatrixRule):
     dct_method: str = "matmul"       # "matmul" (TPU/MXU) | "fft" (Makhoul)
     momentum_dtype: str = "float32"
     needs_shared_basis: bool = True
+
+    def __post_init__(self):
+        if self.ranking_norm not in _RANKING_NORMS:
+            raise ValueError(
+                f"unknown ranking_norm {self.ranking_norm!r}; allowed: "
+                f"{_RANKING_NORMS}")
+        if self.dct_method not in _DCT_METHODS:
+            raise ValueError(
+                f"unknown dct_method {self.dct_method!r}; allowed: "
+                f"{_DCT_METHODS}")
+        if isinstance(self.rank, int) and self.rank < 1:
+            raise ValueError(f"rank must be >= 1, got {self.rank}")
 
     def init(self, shape, dtype):
         return TrionLeaf(m=jnp.zeros(shape, jnp.dtype(self.momentum_dtype)))
@@ -71,15 +94,29 @@ class TrionRule(MatrixRule):
         return d, TrionLeaf(m=new_m)
 
 
+def trion_transform(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
+                    weight_decay: float = 0.01, ns_steps: int = 5,
+                    ranking_norm: str = "l2", dct_method: str = "matmul",
+                    momentum_dtype: str = "float32") -> GradientTransform:
+    """Matrix-leaf Trion pipeline for ``partition`` / ``inject_hyperparams``."""
+    rule = TrionRule(rank=rank, mu=mu, ns_steps=ns_steps,
+                     ranking_norm=ranking_norm, dct_method=dct_method,
+                     momentum_dtype=momentum_dtype)
+    return chain(lowrank_project(rule), scale_by_learning_rate(lr),
+                 add_decayed_weights(weight_decay, schedule=lr))
+
+
 def trion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
           weight_decay: float = 0.01, ns_steps: int = 5,
           ranking_norm: str = "l2", dct_method: str = "matmul",
           momentum_dtype: str = "float32", basis_mode: str = "stored",
-          label_fn=None, **adam_kw) -> Optimizer:
+          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          label_fn=None) -> Optimizer:
     rule = TrionRule(rank=rank, mu=mu, ns_steps=ns_steps,
                      ranking_norm=ranking_norm, dct_method=dct_method,
                      momentum_dtype=momentum_dtype)
-    kw = dict(weight_decay=weight_decay, basis_mode=basis_mode, **adam_kw)
+    kw = dict(weight_decay=weight_decay, basis_mode=basis_mode,
+              b1=b1, b2=b2, eps=eps)
     if label_fn is not None:
         kw["label_fn"] = label_fn
-    return make_matrix_optimizer(rule, lr, **kw)
+    return matrix_optimizer(rule, lr, **kw)

@@ -306,21 +306,50 @@ def cache_specs_tree(cache, mesh) -> Any:
 
 
 def opt_state_specs(opt_state, params, p_specs):
-    """PartitionSpecs for a HarnessState given param specs.
+    """PartitionSpecs for an optimizer state given param specs.
 
-    ``params`` drives the tree structure; each per-param state subtree
+    ``params`` drives the association; each per-param state subtree
     (TrionLeaf / ProjAdamLeaf / FullAdamLeaf / ...) is walked and every array
     gets a spec by shape-matching against its parameter.
+
+    Handles both the legacy ``HarnessState`` (``leaves`` is a params-shaped
+    tree of per-leaf states) and the transform-chain ``ChainState``
+    (``leaves`` nests combinator state: chain tuples, partition dicts whose
+    per-label trees are params-shaped with MaskedNode holes,
+    inject-hyperparams records). The walk descends combinator containers
+    until a params-shaped subtree matches; anything unmatched (hyperparam
+    scalars, empty states) replicates.
     """
     def leaf_specs(p, p_spec, leaf_state):
         return jax.tree.map(
             lambda s: _match_state_spec(p.shape, p_spec, s.shape), leaf_state
         )
 
-    leaves = jax.tree.map(leaf_specs, params, p_specs, opt_state.leaves)
+    def try_params_shaped(node):
+        # structural probe only: does `node` flatten up to the params tree?
+        try:
+            jax.tree_util.tree_structure(params).flatten_up_to(node)
+        except (ValueError, TypeError, KeyError):
+            return None
+        # it does — a failure deriving specs past this point is a real bug
+        # and must raise, not silently degrade to replication
+        return jax.tree.map(leaf_specs, params, p_specs, node)
+
+    def walk(node):
+        mapped = try_params_shaped(node)
+        if mapped is not None:
+            return mapped
+        if isinstance(node, tuple) and hasattr(node, "_fields"):
+            return type(node)(*[walk(c) for c in node])
+        if isinstance(node, (tuple, list)):
+            return type(node)(walk(c) for c in node)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return P()
+
     return type(opt_state)(
         step=P(),
         key=P(),
         bases=jax.tree.map(lambda _: P(), opt_state.bases),
-        leaves=leaves,
+        leaves=walk(opt_state.leaves),
     )

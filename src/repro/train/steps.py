@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
-from repro.optim.common import apply_updates
+from repro.optim import apply_updates
 
 
 class TrainState(NamedTuple):

@@ -1,0 +1,98 @@
+"""Leaf-routing coverage: ``default_label_fn`` and custom routing through
+``partition`` (satellite of the transform-chain redesign).
+
+The default policy (paper practice): linear-layer matrices go low-rank;
+embeddings / norms / biases / tiny or 1D leaves take the full-rank AdamW
+fallback. Name hints win over shape.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import transform as tx
+from repro.optim.common import FullAdamLeaf, default_label_fn, labelled_tree
+from repro.optim.muon import MuonLeaf, MuonRule
+from repro.optim.projected_adam import ProjAdamLeaf, ProjectedAdamRule
+
+
+@pytest.mark.parametrize("path", [
+    "embed/table", "unembed/w", "lm_head/w", "vocab_proj/w", "final_norm/w",
+    "attn/scale", "mlp/bias", "pos_emb/w", "ssm/a_log", "ssm/dt_proj",
+    "rwkv/decay", "conv1d/w",
+])
+def test_name_hints_force_full_path(path):
+    """Every hinted name routes 'full' even for a big 2D matrix."""
+    leaf = jnp.ones((256, 256))
+    assert default_label_fn(path, leaf) == "full"
+
+
+@pytest.mark.parametrize("shape", [(7,), (16,), (128,)])
+def test_ndim_below_2_is_full(shape):
+    assert default_label_fn("block/w", jnp.ones(shape)) == "full"
+
+
+@pytest.mark.parametrize("shape,expect", [
+    ((7, 128), "full"),      # min dim < 8: not worth projecting
+    ((128, 7), "full"),
+    ((8, 128), "lowrank"),   # boundary: min dim == 8 qualifies
+    ((64, 64), "lowrank"),
+])
+def test_min_dim_threshold(shape, expect):
+    assert default_label_fn("block/w", jnp.ones(shape)) == expect
+
+
+def test_scan_stacked_leaves_route_lowrank():
+    """(layers, m, n) and (layers, experts, m, n) stacked leaves are matrix
+    leaves — routing looks at the trailing two dims."""
+    assert default_label_fn("block/wq", jnp.ones((12, 64, 64))) == "lowrank"
+    assert default_label_fn("moe/wi", jnp.ones((4, 8, 64, 32))) == "lowrank"
+    # stacked but tiny trailing dims still fall back
+    assert default_label_fn("block/w", jnp.ones((12, 4, 64))) == "full"
+
+
+def test_labelled_tree_paths_join_nested_keys():
+    params = {"block": {"attn": {"wq": jnp.ones((16, 16))},
+                        "norm": jnp.ones((16,))},
+              "embed": jnp.ones((32, 16))}
+    labels = labelled_tree(params)
+    assert labels["block"]["attn"]["wq"] == "lowrank"
+    assert labels["block"]["norm"] == "full"
+    assert labels["embed"] == "full"          # name hint beats 2D shape
+
+
+def test_custom_label_fn_routes_two_rules_through_partition():
+    """A user label_fn sends attention matrices to projected-Adam and MLP
+    matrices to Muon — and each leaf's state proves where it landed."""
+    params = {
+        "attn": {"wq": jnp.ones((16, 32)), "wo": jnp.ones((32, 16))},
+        "mlp": {"wi": jnp.ones((16, 48)), "wo": jnp.ones((48, 16))},
+        "norm": jnp.ones((16,)),
+    }
+
+    def label_fn(path, leaf):
+        if leaf.ndim < 2:
+            return "full"
+        return "attn" if path.startswith("attn") else "mlp"
+
+    opt = tx.as_optimizer(tx.partition({
+        "attn": tx.lowrank_project(ProjectedAdamRule(rank=4)),
+        "mlp": tx.lowrank_project(MuonRule()),
+        "full": tx.scale_by_adam(),
+    }, label_fn))
+    state = opt.init(params)
+
+    for name in ("wq", "wo"):
+        assert isinstance(state.leaves["attn"]["attn"][name], ProjAdamLeaf)
+    for name in ("wi", "wo"):
+        assert isinstance(state.leaves["mlp"]["mlp"][name], MuonLeaf)
+    assert isinstance(state.leaves["full"]["norm"], FullAdamLeaf)
+
+    g = {k: (jnp.full(v.shape, 0.1) if not isinstance(v, dict) else
+             {kk: jnp.full(vv.shape, 0.1) for kk, vv in v.items()})
+         for k, v in params.items()}
+    upd, state2 = opt.update(g, state, params)
+    assert all(np.isfinite(np.asarray(u)).all()
+               for u in __import__("jax").tree.leaves(upd))
+    # ProjAdam keeps low-rank moments; Muon keeps full-size momentum
+    assert state2.leaves["attn"]["attn"]["wq"].m.shape == (32, 4)  # oriented
+    assert state2.leaves["mlp"]["mlp"]["wi"].m.shape == (16, 48)

@@ -10,11 +10,20 @@ import numpy as np
 import pytest
 
 from repro.optim import OPTIMIZERS, apply_updates, get_optimizer
-from repro.optim.common import HarnessState
 from repro.optim.projected_adam import ProjAdamLeaf
 from repro.optim.trion import TrionLeaf
 
 D_IN, D_H, D_OUT = 16, 32, 4
+
+
+def _leaf(state, label, *path):
+    """Per-leaf state in a matrix preset's ChainState: the presets are
+    chain(partition({lowrank, full}), lr, decay), so member 0 holds the
+    partition dict of params-shaped (holey) state trees."""
+    node = state.leaves[0][label]
+    for k in path:
+        node = node[k]
+    return node
 
 
 def _init_params(key):
@@ -100,7 +109,7 @@ def test_trion_state_has_no_projection_matrices():
     params, *_ = _make_problem()
     opt = get_optimizer("trion", lr=1e-2, rank=8)
     state = opt.init(params)
-    leaf = state.leaves["layer1"]["kernel"]
+    leaf = _leaf(state, "lowrank", "layer1", "kernel")
     assert isinstance(leaf, TrionLeaf)
     assert leaf.m.shape == (D_IN, D_H)
     # shared DCT basis stored once per distinct projected width; layer2's
@@ -115,7 +124,7 @@ def test_dct_adamw_state_is_lowrank_plus_indices():
     r = 8
     opt = get_optimizer("dct_adamw", lr=1e-2, rank=r)
     state = opt.init(params)
-    leaf = state.leaves["layer1"]["kernel"]
+    leaf = _leaf(state, "lowrank", "layer1", "kernel")
     assert isinstance(leaf, ProjAdamLeaf)
     assert leaf.m.shape == (D_H, r) and leaf.v.shape == (D_H, r)  # oriented
     assert leaf.proj.dtype == jnp.int32 and leaf.proj.shape == (r,)
@@ -127,7 +136,7 @@ def test_dion_stores_per_layer_basis():
     params, *_ = _make_problem()
     opt = get_optimizer("dion", lr=1e-2, rank=8)
     state = opt.init(params)
-    leaf = state.leaves["layer1"]["kernel"]
+    leaf = _leaf(state, "lowrank", "layer1", "kernel")
     assert leaf.q.shape == (D_IN, 8)  # oriented: min dim is D_IN
 
 
@@ -135,7 +144,7 @@ def test_stacked_leaf_gets_per_layer_indices():
     params, *_ = _make_problem()
     opt = get_optimizer("dct_adamw", lr=1e-2, rank=8)
     state = opt.init(params)
-    leaf = state.leaves["stacked"]["kernel"]
+    leaf = _leaf(state, "lowrank", "stacked", "kernel")
     assert leaf.proj.shape == (3, 8)       # per stacked layer indices
     assert leaf.m.shape == (3, D_H, 8)
 
@@ -145,7 +154,7 @@ def test_bias_uses_full_adam_path():
     opt = get_optimizer("trion", lr=1e-2, rank=8)
     state = opt.init(params)
     from repro.optim.common import FullAdamLeaf
-    assert isinstance(state.leaves["out_bias"], FullAdamLeaf)
+    assert isinstance(_leaf(state, "full", "out_bias"), FullAdamLeaf)
 
 
 def test_trion_fft_matches_matmul_path():
@@ -188,8 +197,8 @@ def test_dct_adamw_exact_rotation_flag_equivalent():
         np.testing.assert_allclose(np.asarray(u), np.asarray(v),
                                    atol=5e-3, rtol=2e-2)
     # first moments agree tightly (no 1/sqrt(v) amplification)
-    m0 = results[0][1].leaves["layer1"]["kernel"].m
-    m1 = results[1][1].leaves["layer1"]["kernel"].m
+    m0 = _leaf(results[0][1], "lowrank", "layer1", "kernel").m
+    m1 = _leaf(results[1][1], "lowrank", "layer1", "kernel").m
     np.testing.assert_allclose(np.asarray(m0), np.asarray(m1), atol=1e-5)
 
 
@@ -204,7 +213,7 @@ def test_galore_refresh_interval():
         grads = jax.grad(_loss)(p, x, y)
         upd, state = jax.jit(opt.update)(grads, state, p)
         p = apply_updates(p, upd)
-        bases.append(np.asarray(state.leaves["layer1"]["kernel"].proj))
+        bases.append(np.asarray(_leaf(state, "lowrank", "layer1", "kernel").proj))
     # refresh at steps 1 and 4 (t % 3 == 1); constant in between
     assert np.allclose(bases[0], bases[1]) and np.allclose(bases[1], bases[2])
     assert not np.allclose(bases[2], bases[3])
