@@ -140,11 +140,13 @@ class _DispatchSpy:
                 "kernel through the chain API — dispatch regression")
 
 
-def _time_opt_step(rule, shape, *, steps: int, warmup: int, seed: int = 0):
-    """Wall-time per full ``optimizer.update`` on one stacked lowrank leaf,
-    driven through the chain API (partition -> lowrank_project(rule)), plus
-    peak live bytes of the compiled step (args + outputs + temps - donated
-    aliases). Returns the kernel-dispatch counters observed at trace time."""
+def compile_opt_step(rule, shape, *, seed: int = 0, telemetry: bool = False):
+    """Compile one full ``optimizer.update`` on a stacked lowrank leaf
+    through the chain API (partition -> lowrank_project(rule)), under the
+    dispatch spy. ``telemetry=True`` installs a stats collector around the
+    traced update (the SubspaceStats pytree becomes a jit output) —
+    exactly what enabling telemetry costs, benchmarks/telemetry_overhead.py
+    gates it. Returns (compiled, inputs, fresh_state_fn, spy, peak_bytes)."""
     from repro.optim.transform import matrix_optimizer
 
     params = {"w": jnp.zeros(shape, jnp.float32)}
@@ -152,23 +154,45 @@ def _time_opt_step(rule, shape, *, steps: int, warmup: int, seed: int = 0):
                                     jnp.float32)}
     opt = matrix_optimizer(rule, 1e-3)
     state = opt.init(params)
+
+    if telemetry:
+        from repro.telemetry.stats import collect
+
+        def update(grads, state, params):
+            with collect() as col:
+                d, new_state = opt.update(grads, state, params)
+            return d, new_state, col.tree()
+    else:
+        update = opt.update
+
     with _DispatchSpy() as spy:
-        compiled = jax.jit(opt.update, donate_argnums=1).lower(
+        compiled = jax.jit(update, donate_argnums=1).lower(
             grads, state, params).compile()
     mem = compiled.memory_analysis()
     peak = None
     if mem is not None:
         peak = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    return compiled, (grads, params), (lambda: opt.init(params)), spy, peak
 
+
+def _time_opt_step(rule, shape, *, steps: int, warmup: int, seed: int = 0,
+                   telemetry: bool = False):
+    """Wall-time per full ``optimizer.update`` (see ``compile_opt_step``)."""
+    compiled, (grads, params), init, spy, peak = compile_opt_step(
+        rule, shape, seed=seed, telemetry=telemetry)
+    state = init()
     times = []
     for _ in range(warmup + steps):
         tic = time.perf_counter()
-        d, state = compiled(grads, state, params)
-        jax.block_until_ready(d)
+        out = compiled(grads, state, params)
+        state = out[1]
+        jax.block_until_ready(out[0])
         times.append(time.perf_counter() - tic)
+    timed = sorted(times[warmup:])
     return {
         "s_per_step": sum(times[warmup:]) / max(steps, 1),
+        "s_per_step_median": timed[len(timed) // 2],
         "peak_live_bytes": peak,
         "dispatch": dict(spy.counts),
     }, spy

@@ -22,12 +22,24 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: reduced config, 20 steps")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--telemetry", default="off",
+                    choices=["off", "jsonl", "csv"],
+                    help="stream subspace telemetry (switches the smoke "
+                         "run to dct_adamw so the stats have a subject)")
+    ap.add_argument("--telemetry-path", default=None)
     args = ap.parse_args()
     steps = 20 if args.smoke else args.steps
-    argv = ["--arch", "llama-30m", "--optimizer", "trion", "--rank", "64",
+    # telemetry runs exercise the paper's optimizer (projected-Adam family
+    # emits SubspaceStats); the default run keeps the historic trion config
+    optimizer = "dct_adamw" if args.telemetry != "off" else "trion"
+    argv = ["--arch", "llama-30m", "--optimizer", optimizer, "--rank", "64",
             "--steps", str(steps), "--ckpt-dir", args.ckpt_dir,
             "--ckpt-every", "50" if not args.smoke else "10",
             "--log-every", "10"]
+    if args.telemetry != "off":
+        argv += ["--telemetry", args.telemetry, "--telemetry-every", "5"]
+        if args.telemetry_path:
+            argv += ["--telemetry-path", args.telemetry_path]
     if args.smoke:
         # llama-30m is already the CPU-sized paper model; just shrink the run
         argv += ["--seq-len", "64", "--batch", "4"]

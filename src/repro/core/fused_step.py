@@ -79,8 +79,8 @@ def resolve(mode: str) -> str:
 # select + project: ONE pass over G
 # ---------------------------------------------------------------------------
 def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
-                       norm: str = "l2", mode: str
-                       ) -> tuple[jax.Array, jax.Array]:
+                       norm: str = "l2", mode: str,
+                       return_norms: bool = False):
     """Dynamic column selection + low-rank extraction in one ``G``-sized pass.
 
     Returns ``(idx (..., r), g_low (..., m, r))``. The kernel path fuses the
@@ -88,16 +88,26 @@ def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
     computes ``S`` row-wise by Makhoul FFT. Either way ``g_low`` is sliced
     out of ``S`` (``S[:, idx] == G @ Q[:, idx]`` exactly), so the reference
     path's second projection matmul never runs.
+
+    ``return_norms=True`` appends the *squared-l2* column norms of ``S``
+    (..., n) — the §4.1 energy statistic the telemetry layer feeds on. The
+    kernel already accumulates them for ranking, so this is free on the
+    "on" path and one reduction over the resident ``S`` on the fft path.
     """
     if mode == "on":
-        s, norms = ops.dct_project_op(gf, q)
-        if norm != "l2":
-            # kernel accumulates squared-l2 only; re-rank from resident S
-            norms = column_norms(s, norm)
-        idx = select_top_r(norms, r)
+        s, norms_sq = ops.dct_project_op(gf, q)
+        rank_norms = norms_sq if norm == "l2" else column_norms(s, norm)
+        idx = select_top_r(rank_norms, r)
         g_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
-        return idx, g_low
-    return dynamic_column_selection(makhoul_dct2(gf), r, ord=norm)
+        return (idx, g_low, norms_sq) if return_norms else (idx, g_low)
+    s = makhoul_dct2(gf)
+    if not return_norms:
+        return dynamic_column_selection(s, r, ord=norm)
+    norms_sq = column_norms(s, "l2")
+    rank_norms = norms_sq if norm == "l2" else column_norms(s, norm)
+    idx = select_top_r(rank_norms, r)
+    g_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
+    return idx, g_low, norms_sq
 
 
 def project_with_indices(gf: jax.Array, q: jax.Array,

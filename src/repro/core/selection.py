@@ -95,6 +95,34 @@ def dual_back_project(b1: jax.Array, b2: jax.Array, q: jax.Array,
     return b1 @ qr_t, b2 @ qr_t
 
 
+def index_overlap(prev_idx: jax.Array, new_idx: jax.Array) -> jax.Array:
+    """Fraction of ``new_idx`` entries also present in ``prev_idx``.
+
+    Both are (..., r) int32 index sets; broadcasts over leading stacked
+    axes. O(r^2) integer compares — the same trick as the 0/1 rotation
+    matrix (DESIGN.md §1), so it costs nothing next to the matmuls. The
+    complement ``1 - overlap`` is the per-refresh subspace drift that the
+    adaptive refresh scheduler feeds on (DESIGN.md §8).
+    """
+    eq = prev_idx[..., :, None] == new_idx[..., None, :]
+    return jnp.mean(jnp.any(eq, axis=-2).astype(jnp.float32), axis=-1)
+
+
+def topr_margin(norms: jax.Array, r: int) -> jax.Array:
+    """Relative gap between the r-th and (r+1)-th largest column statistic.
+
+    ``(v_r - v_{r+1}) / v_1`` in [0, 1]: how decisively the top-r cut
+    separates the kept columns from the first dropped one. 1.0 when
+    ``r >= n`` (nothing is dropped). Operates on the already-computed
+    ranking statistic — no extra pass over ``S``.
+    """
+    n = norms.shape[-1]
+    if r >= n:
+        return jnp.ones(norms.shape[:-1], jnp.float32)
+    v, _ = jax.lax.top_k(norms.astype(jnp.float32), r + 1)
+    return (v[..., r - 1] - v[..., r]) / (v[..., 0] + 1e-30)
+
+
 def reconstruction_error_sq(g: jax.Array, q: jax.Array, idx: jax.Array) -> jax.Array:
     """``||G - Q_r Q_r^T' G||_F^2`` via the §4.1 identity (right projection):
 

@@ -41,6 +41,24 @@ def build(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--supervise", action="store_true")
+    # telemetry + adaptive control (DESIGN.md §8)
+    ap.add_argument("--telemetry", default="off",
+                    choices=["off", "jsonl", "csv"],
+                    help="collect per-leaf SubspaceStats in-jit and stream "
+                         "step-bucketed rows to --telemetry-path")
+    ap.add_argument("--telemetry-path", default=None,
+                    help="output file (default telemetry.<fmt> next to "
+                         "--ckpt-dir, else ./telemetry.<fmt>)")
+    ap.add_argument("--telemetry-every", type=int, default=10,
+                    help="steps aggregated per telemetry row")
+    ap.add_argument("--adaptive-rank", action="store_true",
+                    help="closed-loop per-layer rank reallocation from "
+                         "captured energy (projected-Adam family only)")
+    ap.add_argument("--adaptive-refresh", action="store_true",
+                    help="closed-loop per-layer refresh-interval control "
+                         "from index-overlap drift")
+    ap.add_argument("--control-every", type=int, default=50,
+                    help="steps between controller decisions")
     return ap.parse_args(argv)
 
 
@@ -70,25 +88,109 @@ def main(argv=None) -> int:
             raise SystemExit(f"--fused applies to the projected-Adam family "
                              f"only, not {args.optimizer!r}")
         opt_kw["fused"] = args.fused
-    # each preset is a thin chain (partition -> rule / adam fallback ->
-    # lr/decay); get_optimizer validates kwargs eagerly with the allowed set
-    opt = get_optimizer(args.optimizer, lr=lr, **opt_kw)
+    adaptive = args.adaptive_rank or args.adaptive_refresh
+    telemetry_on = args.telemetry != "off" or adaptive
+    if adaptive and args.optimizer not in ("dct_adamw", "ldadamw", "galore",
+                                           "frugal", "fira"):
+        raise SystemExit("--adaptive-rank/--adaptive-refresh apply to the "
+                         f"projected-Adam family only, not "
+                         f"{args.optimizer!r}")
+    if args.adaptive_refresh and args.optimizer != "dct_adamw":
+        # drift is measured from index overlap, which only index-based
+        # projectors emit (basis projectors report the -1 sentinel and the
+        # scheduler would be silently inert) — the CLI presets for the
+        # other family members use power/svd projectors
+        raise SystemExit("--adaptive-refresh needs an index-based projector"
+                         " (dct); use --optimizer dct_adamw")
 
-    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+    def make_optimizer(overrides=None):
+        kw = dict(opt_kw)
+        if overrides:
+            kw["overrides"] = overrides
+        return get_optimizer(args.optimizer, lr=lr, **kw)
+
+    def make_step(opt):
+        return jax.jit(make_train_step(cfg, opt, telemetry=telemetry_on),
+                       donate_argnums=0)
+
     batch_fn = make_batch_fn(cfg, args.seq_len, args.batch, seed=args.seed)
 
-    trainer = Trainer(
-        train_step=step_fn,
-        init_state_fn=lambda: init_state(cfg, opt,
-                                         jax.random.PRNGKey(args.seed)),
-        batch_fn=lambda s: batch_fn(jnp.int32(s)),
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        log_every=args.log_every)
-    state = trainer.run(total_steps=args.steps)
+    sink = None
+    if args.telemetry != "off":
+        from repro.telemetry.sink import TelemetrySink
+        path = args.telemetry_path or (
+            f"{args.ckpt_dir}/telemetry.{args.telemetry}" if args.ckpt_dir
+            else f"telemetry.{args.telemetry}")
+        # append exactly when this run will resume from a checkpoint: a
+        # preemption restart must not truncate the pre-preemption
+        # telemetry, while a fresh run must not inherit a stale file
+        resuming = False
+        if args.ckpt_dir:
+            from repro.train.checkpoint import CheckpointManager
+            resuming = CheckpointManager(
+                args.ckpt_dir).latest_step() is not None
+        sink = TelemetrySink(path, fmt=args.telemetry,
+                             every=args.telemetry_every, append=resuming)
+
+    trainer_kw = dict(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                      log_every=args.log_every,
+                      log_metrics=sink.log_metrics if sink else None)
+
+    if adaptive:
+        from repro.telemetry.adaptive import AdaptiveOptimizerManager
+        from repro.telemetry.controllers import (
+            RankAllocator, RankAllocatorConfig, RefreshScheduler,
+            RefreshSchedulerConfig, leaf_inventory)
+        from repro.models import transformer as T
+
+        params_sds = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(args.seed)))
+        leaves = leaf_inventory(params_sds)
+        allocator = scheduler = None
+        if args.adaptive_rank:
+            allocator = RankAllocator(
+                RankAllocatorConfig(base_rank=args.rank,
+                                    decide_every=args.control_every),
+                leaves)
+        if args.adaptive_refresh:
+            # the ladder is seeded from the preset's refresh cadence (the
+            # dct_adamw CLI preset runs T_u=1) so a stretch doubles the
+            # configured interval rather than resetting it
+            scheduler = RefreshScheduler(
+                RefreshSchedulerConfig(base_interval=1,
+                                       decide_every=args.control_every,
+                                       cooldown=args.control_every),
+                leaves)
+        manager = AdaptiveOptimizerManager(
+            make_optimizer=make_optimizer, make_step=make_step,
+            make_train_state=lambda opt: init_state(
+                cfg, opt, jax.random.PRNGKey(args.seed)),
+            rank_allocator=allocator, refresh_scheduler=scheduler)
+        trainer = Trainer(train_step=manager.step,
+                          init_state_fn=manager.init_state,
+                          batch_fn=lambda s: batch_fn(jnp.int32(s)),
+                          control_hook=manager.control_hook,
+                          extra_state=manager, **trainer_kw)
+    else:
+        opt = make_optimizer()
+        step_fn = make_step(opt)
+        trainer = Trainer(
+            train_step=step_fn,
+            init_state_fn=lambda: init_state(cfg, opt,
+                                             jax.random.PRNGKey(args.seed)),
+            batch_fn=lambda s: batch_fn(jnp.int32(s)), **trainer_kw)
+
+    try:
+        state = trainer.run(total_steps=args.steps)
+    finally:
+        if sink is not None:
+            sink.close()
     final = trainer.metrics_history[-1] if trainer.metrics_history else {}
     if final:
         print(f"[train] done at step {int(state.step)}: "
               f"loss {float(final['loss']):.4f}")
+    if adaptive and args.adaptive_rank:
+        print(f"[train] final rank allocation: {allocator.alloc}")
     return 0
 
 

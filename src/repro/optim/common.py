@@ -139,6 +139,21 @@ class Context:
     step: jax.Array
     bases: dict          # {"n": (n,n) DCT-II matrix} (may be empty)
     key: jax.Array | None = None
+    # telemetry channel (repro.telemetry.stats): the chain runtime installs
+    # the active StatsCollector here; lowrank_project narrows it to a
+    # per-leaf StatsScope. None = telemetry off -> rules skip stat
+    # construction entirely, so the traced graph is unchanged.
+    stats: Any = None
+
+    def record_stats(self, stats) -> None:
+        """Emit this leaf's SubspaceStats into the active collector (no-op
+        when telemetry is off)."""
+        if self.stats is not None:
+            self.stats.record(stats)
+
+    @property
+    def wants_stats(self) -> bool:
+        return self.stats is not None
 
     def basis(self, n: int, dtype=jnp.float32) -> jax.Array:
         if self.bases and str(n) in self.bases:

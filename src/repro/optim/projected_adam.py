@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from repro.core import fused_step
 from repro.core.error_feedback import QuantizedBuffer, zeros_q8
 from repro.core.projectors import PROJECTOR_KINDS, Projector, rotation_matrix
+from repro.core.selection import index_overlap, topr_margin
+from repro.telemetry import stats as tstats
 
 from .common import (
     MatrixRule,
@@ -87,6 +89,10 @@ class ProjectedAdamRule(MatrixRule):
     fused: str = "auto"                   # fused-step dispatch (DESIGN.md §3):
     #   "auto" (kernels on TPU, reference elsewhere) | "on" (Pallas kernels,
     #   interpret off-TPU) | "fft" (Makhoul host fast path) | "off" (seed jnp)
+    emit_stats: bool = True               # emit SubspaceStats when a
+    #   telemetry collector is installed (DESIGN.md §8). With no collector
+    #   the traced graph is identical either way; False opts this rule out
+    #   even under an active collector.
 
     def __post_init__(self):
         """Eager config validation: fail at construction with the allowed
@@ -146,38 +152,88 @@ class ProjectedAdamRule(MatrixRule):
             eye = jnp.eye(r, dtype=jnp.float32)
             return jnp.broadcast_to(eye, (*gf.shape[:-2], r, r))
 
+        # telemetry (DESIGN.md §8): both cond branches append a small aux
+        # tuple (margin, overlap, total energy) so per-step stats ride the
+        # existing control flow. With no collector installed (want_stats
+        # False) nothing is appended and the graph is unchanged. On the
+        # fused refresh path the total comes from the already-reduced
+        # column norms (||S||_F^2 == ||G||_F^2, Q orthogonal) — zero extra
+        # G-sized work; elsewhere it is one reduction fused into reads of
+        # gf the step performs anyway.
+        want_stats = ctx.wants_stats and self.emit_stats
+        need_resid = self.residual != "discard"
+        idx_based = self.projector in ("dct", "randperm")
+        batch = gf.shape[:-2]
+
+        def keep_aux(g_low):
+            # keep step: no selection happened, so neither margin nor
+            # overlap is a measurement — both report the -1 sentinel
+            # (consumers gate on >= 0). Col energies from the skinny g_low
+            # (an (m, r) reduction).
+            return (-jnp.ones(batch, jnp.float32),
+                    -jnp.ones(batch, jnp.float32),
+                    jnp.sum(gf * gf, axis=(-2, -1)),
+                    None if g_low is None
+                    else jnp.sum(g_low * g_low, axis=-2))
+
+        def refresh_aux(new_proj, norms_sq):
+            margin = (topr_margin(norms_sq, r) if norms_sq is not None
+                      else -jnp.ones(batch, jnp.float32))
+            overlap = (index_overlap(state.proj, new_proj) if idx_based
+                       else -jnp.ones(batch, jnp.float32))
+            # the barrier pins this tiny (n,) -> () reduction to the
+            # already-materialized norms: without it XLA re-derives the sum
+            # from the G-sized squared-S, an extra full read of S that the
+            # ≤3% overhead gate (telemetry_overhead bench) catches
+            total = (jnp.sum(jax.lax.optimization_barrier(norms_sq),
+                             axis=-1) if norms_sq is not None
+                     else jnp.sum(gf * gf, axis=(-2, -1)))
+            # selected column energies ||G q_i||^2 == norms_sq[idx]: a free
+            # (n,) -> (r,) gather of the already-reduced ranking statistic,
+            # NOT a fresh reduction over S/g_low (that extra S-sized read
+            # is exactly what the ≤3% overhead gate caught)
+            col_e = (None if norms_sq is None else
+                     jnp.take_along_axis(norms_sq, new_proj, axis=-1))
+            return (margin, overlap, total, col_e)
+
         if fused:
             # refresh folds selection AND projection into one pass over G:
             # g_low falls out of S (Alg. 1 line 8), so both branches return it
             def refresh(_):
-                new_proj, g_low = fused_step.select_and_project(
-                    gf, q, r, norm=self.ranking_norm, mode=mode)
-                if not self.rotate:
-                    return new_proj, g_low
-                rot = rotation_matrix(state.proj, new_proj, p, cols,
-                                      shared_q=q,
-                                      exact_matmul=self.exact_rotation_matmul)
-                return new_proj, rot, g_low
+                sp = fused_step.select_and_project(
+                    gf, q, r, norm=self.ranking_norm, mode=mode,
+                    return_norms=want_stats)
+                new_proj, g_low = sp[0], sp[1]
+                out = (new_proj, g_low)
+                if self.rotate:
+                    rot = rotation_matrix(state.proj, new_proj, p, cols,
+                                          shared_q=q,
+                                          exact_matmul=self.exact_rotation_matmul)
+                    out = (new_proj, rot, g_low)
+                return out + ((refresh_aux(new_proj, sp[2]),) if want_stats
+                              else ())
 
             def keep(_):
                 g_low = fused_step.project_with_indices(gf, q, state.proj)
-                if not self.rotate:
-                    return state.proj, g_low
-                return state.proj, eye_rot(), g_low
+                out = ((state.proj, g_low) if not self.rotate
+                       else (state.proj, eye_rot(), g_low))
+                return out + ((keep_aux(g_low),) if want_stats else ())
         else:
             def refresh(_):
                 new_proj = p.update(gf, state.proj, shared_q=q, key=ctx.key)
-                if not self.rotate:
-                    return (new_proj,)
-                rot = rotation_matrix(state.proj, new_proj, p, cols,
-                                      shared_q=q,
-                                      exact_matmul=self.exact_rotation_matmul)
-                return new_proj, rot
+                out = (new_proj,)
+                if self.rotate:
+                    rot = rotation_matrix(state.proj, new_proj, p, cols,
+                                          shared_q=q,
+                                          exact_matmul=self.exact_rotation_matmul)
+                    out = (new_proj, rot)
+                return out + ((refresh_aux(new_proj, None),) if want_stats
+                              else ())
 
             def keep(_):
-                if not self.rotate:
-                    return (state.proj,)
-                return state.proj, eye_rot()
+                out = ((state.proj,) if not self.rotate
+                       else (state.proj, eye_rot()))
+                return out + ((keep_aux(None),) if want_stats else ())
 
         if self.update_interval == 1:
             out = refresh(None)
@@ -185,9 +241,10 @@ class ProjectedAdamRule(MatrixRule):
             do_refresh = (ctx.step % self.update_interval == 1) | (ctx.step == 1)
             out = jax.lax.cond(do_refresh, refresh, keep, None)
         proj_state = out[0]
+        stats_aux = out[-1] if want_stats else None
 
         if fused:
-            g_low = out[-1]                                     # (..., rows, r)
+            g_low = out[2 if self.rotate else 1]                # (..., rows, r)
         else:
             g_low = p.project(gf, proj_state, shared_q=q)       # (..., rows, r)
 
@@ -206,7 +263,6 @@ class ProjectedAdamRule(MatrixRule):
         vhat = v / (1.0 - self.b2**t)
         u_low = mhat / (jnp.sqrt(vhat) + self.eps)
 
-        need_resid = self.residual != "discard"
         if fused:
             if need_resid:
                 d, recon = fused_step.fused_dual_backproject(
@@ -233,6 +289,27 @@ class ProjectedAdamRule(MatrixRule):
                           + self.eps))
                 d = d + phi * resid                             # FIRA scaling
 
+        if want_stats:
+            # every term is resident already: selected column energies and
+            # total energy from the branch aux, and the residual mass from
+            # the exact orthogonal split ||Xi||^2 = ||G||^2 - ||g_low||^2 —
+            # never a reduction over the materialized residual
+            col_e = stats_aux[3]                                # (..., r)
+            if col_e is None:      # reference path: reduce the skinny g_low
+                col_e = jnp.sum(g_low * g_low, axis=-2)
+            sel_sq = jnp.sum(col_e, axis=-1)
+            total_sq = stats_aux[2]
+            if self.residual == "ef":
+                ef_norm = jnp.sqrt(jnp.maximum(total_sq - sel_sq, 0.0))
+            else:
+                ef_norm = jnp.zeros(batch, jnp.float32)
+            ctx.record_stats(tstats.SubspaceStats(
+                captured_energy=tstats.captured_energy(sel_sq, total_sq),
+                topr_margin=stats_aux[0],
+                index_overlap=stats_aux[1],
+                ef_norm=ef_norm,
+                rank_utilization=tstats.rank_utilization(col_e)))
+
         d = deorient(d, transposed)
         return d, ProjAdamLeaf(m=m, v=v, proj=proj_state, ef=new_ef,
                                inner_step=inner)
@@ -250,10 +327,13 @@ def _build(lr, rule_kw, harness_kw) -> Optimizer:
 
 
 def projected_adam_transform(rule: ProjectedAdamRule, lr: Schedule, *,
-                             weight_decay: float = 0.0) -> GradientTransform:
+                             weight_decay: float = 0.0,
+                             overrides: dict[str, dict] | None = None
+                             ) -> GradientTransform:
     """Matrix-leaf projected-Adam pipeline (rule -> -lr -> decay) for use
     inside ``partition`` (e.g. dct-adamw-on-attention + muon-on-mlp)."""
-    return chain(lowrank_project(rule), scale_by_learning_rate(lr),
+    return chain(lowrank_project(rule, overrides=overrides),
+                 scale_by_learning_rate(lr),
                  add_decayed_weights(weight_decay, schedule=lr))
 
 
@@ -261,13 +341,15 @@ def dct_adamw_transform(lr: Schedule, *, rank: int = 128,
                         update_interval: int = 1, weight_decay: float = 0.01,
                         error_feedback: bool = True, ef_dtype: str = "q8",
                         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-                        fused: str = "auto") -> GradientTransform:
+                        fused: str = "auto",
+                        overrides: dict | None = None) -> GradientTransform:
     """Matrix-leaf DCT-AdamW pipeline for ``partition``/``inject_hyperparams``."""
     rule = _rule(dict(rank=rank, projector="dct",
                       update_interval=update_interval, rotate=True,
                       residual="ef" if error_feedback else "discard",
                       ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps, fused=fused))
-    return projected_adam_transform(rule, lr, weight_decay=weight_decay)
+    return projected_adam_transform(rule, lr, weight_decay=weight_decay,
+                                    overrides=overrides)
 
 
 def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
@@ -275,11 +357,14 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
               ef_dtype: str = "q8", b1: float = 0.9, b2: float = 0.999,
               eps: float = 1e-8, exact_rotation_matmul: bool = False,
               fused: str = "auto", basis_mode: str = "stored",
-              label_fn=None) -> Optimizer:
+              label_fn=None, overrides: dict | None = None) -> Optimizer:
     """The paper's DCT-AdamW (Algorithm 2). ``fused`` selects the execution
     layer: "auto" | "on" (Pallas kernels) | "fft" (Makhoul host fast path) |
-    "off" (jnp reference) — see core/fused_step.py / DESIGN.md §3."""
-    hk = dict(weight_decay=weight_decay, basis_mode=basis_mode)
+    "off" (jnp reference) — see core/fused_step.py / DESIGN.md §3.
+    ``overrides``: per-leaf-path rule field overrides (e.g. per-layer ranks
+    from the adaptive rank allocator, DESIGN.md §8)."""
+    hk = dict(weight_decay=weight_decay, basis_mode=basis_mode,
+              overrides=overrides)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector="dct",
@@ -292,12 +377,13 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
 
 def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
             error_feedback: bool = True, b1: float = 0.9, b2: float = 0.999,
-            eps: float = 1e-8, fused: str = "auto", label_fn=None) -> Optimizer:
+            eps: float = 1e-8, fused: str = "auto", label_fn=None,
+            overrides: dict | None = None) -> Optimizer:
     """LDAdamW baseline: block power iteration, per-step subspace, rotation
     via real r x r matmul of two stored projection matrices. ``fused``
     covers the EF quantize/dequant kernels (the power projector itself
     keeps the reference math)."""
-    hk = dict(weight_decay=weight_decay)
+    hk = dict(weight_decay=weight_decay, overrides=overrides)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector="power", update_interval=1,
@@ -310,9 +396,10 @@ def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
 def galore(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-           fused: str = "auto", label_fn=None) -> Optimizer:
+           fused: str = "auto", label_fn=None,
+           overrides: dict | None = None) -> Optimizer:
     """GaLore baseline: SVD every T_u steps, residual discarded, no rotation."""
-    hk = dict(weight_decay=weight_decay)
+    hk = dict(weight_decay=weight_decay, overrides=overrides)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
@@ -324,10 +411,11 @@ def galore(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
 def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-           fused: str = "auto", label_fn=None) -> Optimizer:
+           fused: str = "auto", label_fn=None,
+           overrides: dict | None = None) -> Optimizer:
     """FRUGAL baseline: state-full low-rank AdamW + state-free SignSGD on the
     residual. ``projector`` in {svd, dct, random, randperm} (paper Table 6)."""
-    hk = dict(weight_decay=weight_decay)
+    hk = dict(weight_decay=weight_decay, overrides=overrides)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
@@ -339,9 +427,10 @@ def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
 def fira(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
          weight_decay: float = 0.01, projector: str = "svd",
          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-         fused: str = "auto", label_fn=None) -> Optimizer:
+         fused: str = "auto", label_fn=None,
+         overrides: dict | None = None) -> Optimizer:
     """FIRA baseline: low-rank AdamW + norm-scaled full-rank residual."""
-    hk = dict(weight_decay=weight_decay)
+    hk = dict(weight_decay=weight_decay, overrides=overrides)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,

@@ -373,23 +373,45 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999,
     return GradientTransform(init, update)
 
 
-def lowrank_project(rule: MatrixRule) -> GradientTransform:
+def lowrank_project(rule: MatrixRule, *,
+                    overrides: dict[str, dict] | None = None
+                    ) -> GradientTransform:
     """Lift a per-matrix-leaf :class:`MatrixRule` to a whole-tree transform.
 
     Each leaf gets a per-leaf :class:`Context` whose PRNG key folds in a
     stable hash of the leaf's tree path; the shared DCT bases arrive via
-    the chain runtime. Emits the rule's raw descent direction ``D`` —
+    the chain runtime; the telemetry collector (if one is installed) is
+    narrowed to the leaf's path so the rule's :class:`SubspaceStats` land
+    under a stable key. Emits the rule's raw descent direction ``D`` —
     compose with ``scale_by_learning_rate`` / ``add_decayed_weights``.
+
+    ``overrides`` maps leaf tree paths (``path_str`` form, the same keys
+    telemetry emits under) to per-leaf field replacements on ``rule`` —
+    e.g. ``{"block/0/wq": {"rank": 192, "update_interval": 4}}``. This is
+    the plug point the adaptive rank/refresh controllers drive
+    (DESIGN.md §8): rank is a static shape parameter, so changed overrides
+    mean a rebuilt optimizer + state migration, handled host-side by
+    :mod:`repro.telemetry.adaptive`.
     """
 
+    def rule_for(path: str) -> MatrixRule:
+        if overrides and path in overrides:
+            return dataclasses.replace(rule, **overrides[path])
+        return rule
+
     def init(params):
-        return jax.tree.map(lambda p: rule.init(p.shape, p.dtype), params)
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, p: rule_for(path_str(kp)).init(p.shape, p.dtype),
+            params)
 
     def update(updates, state, params, ctx):
         def leaf(kp, g, s, p):
+            path = path_str(kp)
             leaf_ctx = dataclasses.replace(
-                ctx, key=leaf_key(ctx.key, path_str(kp)))
-            return rule.update(g, s, p, leaf_ctx)
+                ctx, key=leaf_key(ctx.key, path),
+                stats=ctx.stats.scope(path) if ctx.stats is not None
+                else None)
+            return rule_for(path).update(g, s, p, leaf_ctx)
 
         pairs = jax.tree_util.tree_map_with_path(leaf, updates, state, params)
         d = jax.tree.map(lambda g, pr: pr[0], updates, pairs)
@@ -449,9 +471,15 @@ def as_optimizer(transform: GradientTransform, *, seed: int = 0,
         )
 
     def update(grads, state: ChainState, params):
+        from repro.telemetry.stats import active_collector
+
         step = state.step + 1
+        # the collector (if installed via telemetry.stats.collect around
+        # this — traced — call) rides the ctx; rules record SubspaceStats
+        # into it and the caller returns collector.tree() as a jit output
         ctx = Context(step=step, bases=state.bases,
-                      key=jax.random.fold_in(state.key, step))
+                      key=jax.random.fold_in(state.key, step),
+                      stats=active_collector())
         updates, leaves = transform.update(grads, state.leaves, params, ctx)
         return updates, ChainState(step=step, key=state.key,
                                    bases=state.bases, leaves=leaves)
@@ -471,13 +499,16 @@ def matrix_optimizer(
     basis_mode: str = "stored",
     seed: int = 0,
     fullrank_weight_decay: bool = True,
+    overrides: dict[str, dict] | None = None,
 ) -> Optimizer:
     """The classic matrix-optimizer preset, rebuilt as a chain: route
     matrix leaves to ``rule`` and everything else to full-rank Adam, then
     apply lr scaling and decoupled weight decay. Drop-in replacement for
     the legacy ``make_matrix_optimizer`` (bit-for-bit, see
-    tests/test_transform_api.py)."""
-    routes = {"lowrank": lowrank_project(rule),
+    tests/test_transform_api.py). ``overrides`` is the per-leaf-path rule
+    field override map forwarded to :func:`lowrank_project` (the adaptive
+    rank/refresh controllers' plug point)."""
+    routes = {"lowrank": lowrank_project(rule, overrides=overrides),
               "full": scale_by_adam(b1, b2, eps)}
     if fullrank_weight_decay:
         t = chain(partition(routes, label_fn),

@@ -305,6 +305,18 @@ def cache_specs_tree(cache, mesh) -> Any:
     return jax.tree_util.tree_map_with_path(leaf_spec, cache)
 
 
+def telemetry_specs(tree: Any) -> Any:
+    """PartitionSpecs for telemetry pytrees (per-leaf SubspaceStats under
+    ``metrics["telemetry"]``, controller state, sink records).
+
+    Stats are per-leaf scalars or (layers,)-vectors produced by full
+    reductions over sharded operands — GSPMD already all-reduces them, so
+    every leaf replicates; controller state is host-side JSON mirrored to
+    tiny arrays at most. One rule, applied uniformly: replicate.
+    """
+    return jax.tree.map(lambda _: P(), tree)
+
+
 def opt_state_specs(opt_state, params, p_specs):
     """PartitionSpecs for an optimizer state given param specs.
 

@@ -1,0 +1,22 @@
+"""Subspace telemetry + adaptive control subsystem (DESIGN.md §8).
+
+Layers (host-side pieces import lazily — the in-jit layer depends only on
+jax, so the optimizer stack never pulls in file writers or controllers):
+
+  stats.py        in-jit metrics: :class:`SubspaceStats` emitted per leaf by
+                  the projected-Adam rules, collected through the
+                  transform-chain ``Context`` with near-zero overhead.
+  sink.py         host-side sink: ring buffer + JSONL/CSV writers with
+                  step-bucketed aggregation; plugs into the Trainer's
+                  structured ``log_metrics`` hook.
+  controllers.py  closed-loop controllers: per-layer rank allocator and
+                  adaptive refresh scheduler, both checkpointable.
+  adaptive.py     runtime glue: rebuilds the optimizer with per-leaf
+                  overrides when a controller moves, migrating state.
+"""
+from .stats import (  # noqa: F401
+    StatsCollector,
+    SubspaceStats,
+    active_collector,
+    collect,
+)

@@ -1,0 +1,121 @@
+"""In-jit subspace telemetry: the typed aux pytree and its collector.
+
+The two-step DCT selection computes, for free, the exact quantity that
+tells us how good the low-rank approximation is (§4.1: the column-norm
+mass of ``S = G @ Q``). :class:`SubspaceStats` packages that — plus the
+index-overlap drift and EF-buffer mass that the adaptive controllers need
+— as a per-leaf NamedTuple of small fp32 arrays (leading dims = stacked
+layers), emitted *inside* the traced optimizer update.
+
+Collection is out-of-band with respect to the ``Optimizer(init, update)``
+signature: a :class:`StatsCollector` is installed with :func:`collect`
+around the (traced) ``optimizer.update`` call; the chain runtime
+(``as_optimizer``) picks it up via :func:`active_collector` and threads it
+through the transform-chain ``Context``; ``lowrank_project`` scopes it to
+each leaf's tree path. Because installation happens at trace time, the
+recorded values are tracers and ``collector.tree()`` is a valid jit output
+(``make_train_step`` returns it under ``metrics["telemetry"]``).
+
+With no collector installed ``Context.stats`` is ``None`` and the rules
+skip stat construction entirely — the traced graph is bit-identical to a
+telemetry-free build (zero overhead when off; the ≤3 % when on is gated by
+``benchmarks/telemetry_overhead.py``).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SubspaceStats(NamedTuple):
+    """Per-leaf projection-quality statistics (fp32, leading dims = stacked
+    layers). All derive from quantities the fused step already computes —
+    no extra ``G``-sized passes (DESIGN.md §8)."""
+
+    captured_energy: jax.Array   # ||Q_r^T G||_F^2 / ||G||_F^2 in [0, 1]
+    topr_margin: jax.Array       # (v_r - v_{r+1})/v_1 of column energies;
+    #                              -1 on steps where norms aren't resident
+    index_overlap: jax.Array     # |idx_new ∩ idx_prev| / r at refresh
+    #                              steps; -1 when not a measurement (keep
+    #                              steps, basis/non-index projectors) —
+    #                              consumers gate on >= 0
+    ef_norm: jax.Array           # ||EF||_F written this step (0 if no EF)
+    rank_utilization: jax.Array  # participation ratio of the r selected
+    #                              column energies, in (0, 1]
+
+
+def captured_energy(sel_sq: jax.Array, total_sq: jax.Array) -> jax.Array:
+    """Energy ratio with a zero-gradient-safe denominator."""
+    return sel_sq / jnp.maximum(total_sq, 1e-30)
+
+
+def rank_utilization(col_energies: jax.Array) -> jax.Array:
+    """Participation ratio of the selected column energies, normalized to
+    (0, 1]: 1 when energy spreads evenly over the r kept columns, 1/r when
+    a single column holds everything. ``col_energies``: (..., r)."""
+    r = col_energies.shape[-1]
+    s1 = jnp.sum(col_energies, axis=-1)
+    s2 = jnp.sum(col_energies * col_energies, axis=-1)
+    return (s1 * s1) / (r * jnp.maximum(s2, 1e-30))
+
+
+class StatsScope(NamedTuple):
+    """A collector bound to one leaf's tree path (what rules see as
+    ``ctx.stats``)."""
+
+    collector: "StatsCollector"
+    path: str
+
+    def record(self, stats: SubspaceStats) -> None:
+        self.collector.record(self.path, stats)
+
+
+class StatsCollector:
+    """Accumulates ``{leaf path: SubspaceStats}`` during one update trace."""
+
+    def __init__(self):
+        self._stats: dict[str, SubspaceStats] = {}
+
+    def record(self, path: str, stats: SubspaceStats) -> None:
+        self._stats[path] = stats
+
+    def scope(self, path: str) -> StatsScope:
+        return StatsScope(self, path)
+
+    def tree(self) -> dict[str, SubspaceStats]:
+        """The collected aux pytree — a valid jit output (tracers inside)."""
+        return dict(self._stats)
+
+
+_ACTIVE: list[StatsCollector] = []
+
+
+def active_collector() -> StatsCollector | None:
+    """The innermost installed collector (None = telemetry off)."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def collect():
+    """Install a collector around a traced ``optimizer.update`` call."""
+    col = StatsCollector()
+    _ACTIVE.append(col)
+    try:
+        yield col
+    finally:
+        _ACTIVE.pop()
+
+
+def summarize(stats: SubspaceStats) -> dict[str, float]:
+    """Collapse stacked-layer axes to scalar means (controller food).
+    Sentinel entries (negative margin/overlap on keep steps) are kept as-is
+    — callers filter on them."""
+    import numpy as np
+
+    out = {}
+    for name, val in stats._asdict().items():
+        out[name] = float(np.mean(np.asarray(jax.device_get(val))))
+    return out

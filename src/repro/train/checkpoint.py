@@ -67,6 +67,15 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: int) -> dict:
+        """The manifest saved alongside a checkpoint — ``extra`` entries
+        (e.g. adaptive-controller state) ride here as JSON, so consumers
+        can read them *before* building the restore target (controller
+        state determines the opt-state shapes)."""
+        path = os.path.join(self.dir, f"step_{step}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
+
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Any, extra: dict | None = None):
         """Synchronous atomic save."""

@@ -1,6 +1,24 @@
 """Training loop with checkpoint/restart, preemption handling, and elastic
 restore — the single-process core that ``launch/train.py --supervise``
 wraps with a restart supervisor for node-failure tolerance.
+
+Observability and control plug in through three hooks (DESIGN.md §8):
+
+``log_metrics(record)``
+    Structured per-step metrics: ``record`` is ``{"step": int,
+    "s_per_step": float, **metrics}`` with metric values still device-side
+    (consumers decide when to sync). The trainer's own console line is
+    built from the same records by an internal default formatter, so plain
+    ``print`` and the telemetry sink are both just consumers of this hook.
+``control_hook(step, state, metrics) -> state | None``
+    Closed-loop controllers (adaptive rank/refresh): called every step;
+    a non-None return replaces the train state (the hook owner also swaps
+    its jitted step function — pass a delegating ``train_step``).
+``extra_state``
+    Object with ``state_dict() -> dict`` / ``load_state_dict(dict)``:
+    JSON-serializable controller state checkpointed in the manifest and
+    restored *before* ``init_state_fn`` runs, because restored controller
+    state determines the optimizer-state shapes of the restore target.
 """
 from __future__ import annotations
 
@@ -9,7 +27,6 @@ import time
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.data.pipeline import DataPipeline
 
@@ -21,7 +38,9 @@ class Trainer:
     def __init__(self, *, train_step, init_state_fn, batch_fn,
                  ckpt_dir: str | None = None, ckpt_every: int = 50,
                  keep: int = 3, log_every: int = 10,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 log_metrics: Callable[[dict], None] | None = None,
+                 control_hook=None, extra_state=None):
         self.train_step = train_step
         self.init_state_fn = init_state_fn
         self.batch_fn = batch_fn
@@ -29,7 +48,11 @@ class Trainer:
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.log = log_fn
+        self.log_metrics = log_metrics
+        self.control_hook = control_hook
+        self.extra_state = extra_state
         self._preempted = False
+        self._window: list[float] = []
 
     def _install_sigterm(self):
         def handler(signum, frame):
@@ -40,33 +63,79 @@ class Trainer:
         except ValueError:              # not on main thread (tests)
             pass
 
+    def _default_log_metrics(self, record: dict):
+        """Console formatter over the structured records — same cadence and
+        string as the historic pre-formatted logging."""
+        self._window.append(record["s_per_step"])
+        step = record["step"]
+        if step % self.log_every == 0:
+            dt = sum(self._window) / len(self._window)
+            self._window = []
+            self.log(f"[trainer] step {step} loss "
+                     f"{float(record['loss']):.4f} "
+                     f"({dt * 1e3:.0f} ms/step)")
+
+    def _emit(self, step: int, metrics: dict, dt: float):
+        record = {"step": step, "s_per_step": dt, **metrics}
+        self._default_log_metrics(record)
+        if self.log_metrics is not None:
+            self.log_metrics(record)
+
+    def _ckpt_extra(self) -> dict | None:
+        if self.extra_state is None:
+            return None
+        return {"extra_state": self.extra_state.state_dict()}
+
     def run(self, total_steps: int, resume: bool = True) -> TrainState:
         self._install_sigterm()
-        state = self.init_state_fn()
         start = 0
+        resume_step = None
         if resume and self.ckpt is not None:
-            step, restored = self.ckpt.restore_latest(state)
-            if step is not None:
-                state, start = restored, step
-                self.log(f"[trainer] resumed from checkpoint step {step}")
+            resume_step = self.ckpt.latest_step()
+            if resume_step is not None and self.extra_state is not None:
+                # controller state first: it shapes the restore target
+                extra = self.ckpt.manifest(resume_step).get("extra_state")
+                if extra:
+                    self.extra_state.load_state_dict(extra)
+        state = self.init_state_fn()
+        if resume_step is not None:
+            state = self.ckpt.restore(resume_step, state)
+            start = resume_step
+            self.log(f"[trainer] resumed from checkpoint step {resume_step}")
 
         pipeline = DataPipeline(self.batch_fn, start_step=start)
         losses = []
         try:
-            t0 = time.perf_counter()
             for step in range(start, total_steps):
+                t0 = time.perf_counter()
                 batch = pipeline.get(step)
                 state, metrics = self.train_step(state, batch)
-                losses.append(metrics)
-                if (step + 1) % self.log_every == 0:
-                    loss = float(metrics["loss"])
-                    dt = (time.perf_counter() - t0) / self.log_every
-                    self.log(f"[trainer] step {step + 1} loss {loss:.4f} "
-                             f"({dt * 1e3:.0f} ms/step)")
-                    t0 = time.perf_counter()
+                # block on the loss before stopping the clock — the same
+                # sync point the historic float(loss) imposed — so
+                # s_per_step measures compute, not async dispatch latency
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if "telemetry" in metrics and (
+                        self.log_metrics is not None
+                        or self.control_hook is not None):
+                    # one bulk device->host transfer shared by the sink and
+                    # the controllers (instead of per-field fetches twice)
+                    metrics["telemetry"] = jax.device_get(
+                        metrics["telemetry"])
+                # metrics_history keeps scalars only: retaining every
+                # step's per-leaf stats pytree would grow device memory
+                # unbounded, and the sink's ring/file already persist them
+                losses.append({k: v for k, v in metrics.items()
+                               if k != "telemetry"})
+                self._emit(step + 1, metrics, dt)
+                if self.control_hook is not None:
+                    new_state = self.control_hook(step + 1, state, metrics)
+                    if new_state is not None:
+                        state = new_state
                 if self.ckpt is not None and (
                         (step + 1) % self.ckpt_every == 0 or self._preempted):
-                    self.ckpt.async_save(step + 1, state)
+                    self.ckpt.async_save(step + 1, state,
+                                         extra=self._ckpt_extra())
                 if self._preempted:
                     self.log("[trainer] SIGTERM -> checkpointed, exiting")
                     break

@@ -82,12 +82,17 @@ def grad_fn(params, batch, cfg):
 
 
 def make_train_step(cfg, optimizer, *, grad_clip: float = 1.0,
-                    accum_dtype: str = "float32"):
+                    accum_dtype: str = "float32", telemetry: bool = False):
     """(TrainState, batch) -> (TrainState, metrics).
 
     ``accum_dtype``: microbatch gradient-accumulator dtype. fp32 default;
     bf16 halves the gradient HBM footprint for the >=90B archs (recorded as
     a precision trade in DESIGN.md §7).
+
+    ``telemetry=True`` installs a stats collector around the (traced)
+    optimizer update; the per-leaf :class:`SubspaceStats` the rules emit
+    come back under ``metrics["telemetry"]`` (DESIGN.md §8). Off by
+    default — the graph is then bit-identical to a telemetry-free build.
     """
     adt = jnp.dtype(accum_dtype)
 
@@ -118,10 +123,23 @@ def make_train_step(cfg, optimizer, *, grad_clip: float = 1.0,
         else:
             gnorm = _global_norm(grads)
 
-        updates, new_opt = optimizer.update(grads, state.opt_state,
-                                            state.params)
-        new_params = apply_updates(state.params, updates)
         metrics = dict(metrics)
+        if telemetry:
+            from repro.telemetry.stats import collect
+
+            # the context manager lives entirely at trace time: the rules
+            # record tracer-valued SubspaceStats into the collector and the
+            # collected tree is returned as a regular jit output
+            with collect() as col:
+                updates, new_opt = optimizer.update(grads, state.opt_state,
+                                                    state.params)
+            tel = col.tree()
+            if tel:
+                metrics["telemetry"] = tel
+        else:
+            updates, new_opt = optimizer.update(grads, state.opt_state,
+                                                state.params)
+        new_params = apply_updates(state.params, updates)
         metrics["grad_norm"] = gnorm
         return TrainState(state.step + 1, new_params, new_opt), metrics
 

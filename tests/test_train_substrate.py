@@ -122,6 +122,143 @@ def test_trainer_resume(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# controller state: checkpoint round-trip + preemption (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def _make_manager(tmp_path, cfg, *, rank=8):
+    """Adaptive manager over the tiny model with aggressive decisions."""
+    from repro.telemetry.adaptive import AdaptiveOptimizerManager
+    from repro.telemetry.controllers import (RankAllocator,
+                                             RankAllocatorConfig,
+                                             RefreshScheduler,
+                                             RefreshSchedulerConfig,
+                                             leaf_inventory)
+
+    params_sds = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    leaves = leaf_inventory(params_sds)
+    allocator = RankAllocator(
+        RankAllocatorConfig(base_rank=rank, quantum=2, max_step=2,
+                            decide_every=2, deadband=0.0, ema_decay=0.5),
+        leaves)
+    scheduler = RefreshScheduler(
+        RefreshSchedulerConfig(decide_every=2, cooldown=2, low_drift=0.99,
+                               max_interval=4), leaves)
+    return AdaptiveOptimizerManager(
+        make_optimizer=lambda ov=None: get_optimizer(
+            "dct_adamw", lr=1e-3, rank=rank, fused="fft", overrides=ov),
+        make_step=lambda opt: jax.jit(
+            make_train_step(cfg, opt, telemetry=True)),
+        make_train_state=lambda opt: init_state(cfg, opt,
+                                                jax.random.PRNGKey(0)),
+        rank_allocator=allocator, refresh_scheduler=scheduler,
+        log_fn=lambda s: None)
+
+
+def test_controller_state_checkpoint_roundtrip(tmp_path):
+    """Rank-allocator and refresh-scheduler state survive a
+    CheckpointManager save/restore round-trip via the manifest."""
+    cfg = _tiny()
+    mgr = _make_manager(tmp_path, cfg)
+    # give the controllers non-trivial state
+    mgr.rank_allocator.ema = {p: 0.1 * i for i, p in
+                              enumerate(mgr.rank_allocator.leaves)}
+    mgr.rank_allocator.alloc = {p: (6 if i % 2 else 10) for i, p in
+                                enumerate(mgr.rank_allocator.leaves)}
+    mgr.rank_allocator.last_decision = 7
+    mgr.refresh_scheduler.interval = {
+        p: 2 for p in mgr.refresh_scheduler.interval}
+    mgr.refresh_scheduler.drift_ema = {
+        p: 0.25 for p in mgr.refresh_scheduler.interval}
+
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.ones((4, 4))}
+    cm.save(5, state, extra={"extra_state": mgr.state_dict()})
+
+    mgr2 = _make_manager(tmp_path, cfg)
+    extra = cm.manifest(5)["extra_state"]
+    mgr2.load_state_dict(extra)
+    assert mgr2.rank_allocator.state_dict() == \
+        mgr.rank_allocator.state_dict()
+    assert mgr2.refresh_scheduler.state_dict() == \
+        mgr.refresh_scheduler.state_dict()
+    # the rebuilt optimizer reflects the restored (non-uniform) allocation:
+    # init_state produces moment buffers with the restored per-leaf ranks
+    st = mgr2.init_state()
+    ranks = {leaf.m.shape[-1]
+             for leaf in jax.tree.leaves(
+                 st.opt_state.leaves,
+                 is_leaf=lambda x: type(x).__name__ == "ProjAdamLeaf")
+             if type(leaf).__name__ == "ProjAdamLeaf"}
+    assert ranks == {6, 10}
+
+
+def test_adaptive_trainer_sigterm_preemption_resume(tmp_path):
+    """Simulated SIGTERM mid-run: the trainer checkpoints (controller
+    state in the manifest) and exits; a fresh trainer+manager resumes with
+    the same allocation and finishes."""
+    import signal as _signal
+
+    cfg = _tiny()
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+
+    def make_trainer(mgr, fire_at=None):
+        fired = []
+
+        def maybe_fire(record):
+            if fire_at is not None and record["step"] == fire_at \
+                    and not fired:
+                fired.append(True)
+                _signal.raise_signal(_signal.SIGTERM)   # preemption notice
+
+        return Trainer(train_step=mgr.step, init_state_fn=mgr.init_state,
+                       batch_fn=lambda s: ds.batch(jnp.int32(s)),
+                       ckpt_dir=str(tmp_path), ckpt_every=100,
+                       log_every=100, log_metrics=maybe_fire,
+                       control_hook=mgr.control_hook, extra_state=mgr)
+
+    mgr1 = _make_manager(tmp_path, cfg)
+    state = make_trainer(mgr1, fire_at=6).run(total_steps=20)
+    assert int(state.step) == 6                      # preempted mid-run
+    cm = CheckpointManager(str(tmp_path))
+    assert cm.latest_step() == 6                     # SIGTERM checkpointed
+    saved = cm.manifest(6)["extra_state"]
+    assert saved["rank_allocator"]["ema"]            # controllers had state
+
+    # fresh process: controller state loads BEFORE the restore target is
+    # built, so a restored non-uniform allocation shapes the opt state
+    mgr2 = _make_manager(tmp_path, cfg)
+    state = make_trainer(mgr2).run(total_steps=10)
+    assert int(state.step) == 10
+    assert mgr2.rank_allocator.state_dict()["ema"].keys() == \
+        saved["rank_allocator"]["ema"].keys()
+
+
+# ---------------------------------------------------------------------------
+# structured log_metrics hook (telemetry sink + console both plug in)
+# ---------------------------------------------------------------------------
+def test_trainer_log_metrics_hook_and_console(tmp_path):
+    cfg = _tiny()
+    opt = get_optimizer("trion", lr=1e-3, rank=8)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    records, lines = [], []
+    trainer = Trainer(train_step=step_fn,
+                      init_state_fn=lambda: init_state(
+                          cfg, opt, jax.random.PRNGKey(0)),
+                      batch_fn=lambda s: ds.batch(jnp.int32(s)),
+                      log_every=2, log_fn=lines.append,
+                      log_metrics=records.append)
+    trainer.run(total_steps=4)
+    # hook sees every step, structured
+    assert [r["step"] for r in records] == [1, 2, 3, 4]
+    assert all("loss" in r and "s_per_step" in r for r in records)
+    # the historic console line still appears at the historic cadence
+    assert len(lines) == 2
+    assert lines[0].startswith("[trainer] step 2 loss ")
+    assert "ms/step" in lines[0]
+
+
+# ---------------------------------------------------------------------------
 # schedules
 # ---------------------------------------------------------------------------
 def test_schedules():
