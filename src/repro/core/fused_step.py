@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.core.dct import makhoul_dct2
 from repro.core.error_feedback import QuantizedBuffer, dequantize_q8, quantize_q8
 from repro.core.selection import (
+    allsum,
     back_project,
     column_norms,
     dual_back_project,
@@ -80,7 +81,7 @@ def resolve(mode: str) -> str:
 # ---------------------------------------------------------------------------
 def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
                        norm: str = "l2", mode: str,
-                       return_norms: bool = False):
+                       return_norms: bool = False, psum_axes=None):
     """Dynamic column selection + low-rank extraction in one ``G``-sized pass.
 
     Returns ``(idx (..., r), g_low (..., m, r))``. The kernel path fuses the
@@ -93,21 +94,29 @@ def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
     (..., n) — the §4.1 energy statistic the telemetry layer feeds on. The
     kernel already accumulates them for ranking, so this is free on the
     "on" path and one reduction over the resident ``S`` on the fft path.
+
+    ``psum_axes``: mesh axes the rows of ``gf`` are sharded over (inside a
+    ZeRO-1 shard_map). The kernels see only the local row block; the
+    column statistic is completed by one ``(n,)``-sized psum, so every
+    shard selects the same indices.
     """
     if mode == "on":
         s, norms_sq = ops.dct_project_op(gf, q)
-        rank_norms = norms_sq if norm == "l2" else column_norms(s, norm)
+        norms_sq = allsum(norms_sq, psum_axes)
+        rank_norms = (norms_sq if norm == "l2"
+                      else allsum(column_norms(s, norm), psum_axes))
         idx = select_top_r(rank_norms, r)
         g_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
         return (idx, g_low, norms_sq) if return_norms else (idx, g_low)
     s = makhoul_dct2(gf)
-    if not return_norms:
+    if not return_norms and psum_axes is None:
         return dynamic_column_selection(s, r, ord=norm)
-    norms_sq = column_norms(s, "l2")
-    rank_norms = norms_sq if norm == "l2" else column_norms(s, norm)
+    norms_sq = allsum(column_norms(s, "l2"), psum_axes)
+    rank_norms = (norms_sq if norm == "l2"
+                  else allsum(column_norms(s, norm), psum_axes))
     idx = select_top_r(rank_norms, r)
     g_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
-    return idx, g_low, norms_sq
+    return (idx, g_low, norms_sq) if return_norms else (idx, g_low)
 
 
 def project_with_indices(gf: jax.Array, q: jax.Array,

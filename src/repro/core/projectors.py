@@ -24,7 +24,13 @@ import jax
 import jax.numpy as jnp
 
 from .dct import dct2_matrix
-from .selection import back_project, column_norms, gather_columns, select_top_r
+from .selection import (
+    allsum,
+    back_project,
+    column_norms,
+    gather_columns,
+    select_top_r,
+)
 
 PROJECTOR_KINDS = ("dct", "svd", "power", "random", "randperm")
 
@@ -53,21 +59,35 @@ class Projector:
 
     # -- basis refresh ------------------------------------------------------
     def update(self, g: jax.Array, state: Any, shared_q: jax.Array | None = None,
-               key: jax.Array | None = None) -> Any:
-        """Recompute the basis from the current gradient/momentum ``g``."""
+               key: jax.Array | None = None, psum_axes=None) -> Any:
+        """Recompute the basis from the current gradient/momentum ``g``.
+
+        ``psum_axes``: mesh axes the rows of ``g`` are sharded over (ZeRO-1
+        shard_map, DESIGN.md §9). Row reductions — the dct column energies,
+        the power iteration's ``G^T (G Q)`` contraction — are completed by
+        a psum so every shard derives the same basis. ``svd`` is not
+        row-decomposable and rejects sharded input; key-based kinds
+        (random/randperm) draw from the replicated per-leaf key and need no
+        communication.
+        """
         n = g.shape[-1]
         r = min(self.r, n)
         gf = g.astype(jnp.float32)
         if self.kind == "dct":
             s = gf @ shared_q.astype(jnp.float32)
-            return select_top_r(column_norms(s, self.norm), r)
+            return select_top_r(allsum(column_norms(s, self.norm), psum_axes),
+                                r)
         if self.kind == "svd":
+            if psum_axes:
+                raise ValueError("svd projector refresh needs the full "
+                                 "gradient; it cannot run on ZeRO row "
+                                 "shards (rule.zero_shardable gates this)")
             _, _, vt = jnp.linalg.svd(gf, full_matrices=False)
             return jnp.swapaxes(vt[..., :r, :], -1, -2)
         if self.kind == "power":
             # one block power iteration warm-started from the previous basis
             z = jnp.einsum("...mn,...nr->...mr", gf, state)
-            y = jnp.einsum("...mn,...mr->...nr", gf, z)
+            y = allsum(jnp.einsum("...mn,...mr->...nr", gf, z), psum_axes)
             q, _ = jnp.linalg.qr(y)
             return q
         if self.kind == "random":

@@ -18,6 +18,16 @@ import jax
 import jax.numpy as jnp
 
 
+def allsum(x: jax.Array, axes) -> jax.Array:
+    """Cross-shard sum of a row-block-local reduction (ZeRO-1, DESIGN.md
+    §9); identity when ``axes`` is falsy so the replicated graph is
+    untouched. The single definition every psum-aware call site shares —
+    the sharded/replicated parity guarantee rests on them agreeing."""
+    if not axes:
+        return x
+    return jax.lax.psum(x, axes)
+
+
 def column_norms(s: jax.Array, ord: str = "l2") -> jax.Array:
     """Per-column ranking statistic of ``S`` over the row axis (-2).
 

@@ -17,6 +17,13 @@ accumulator pattern.
 
 Block shapes are multiples of the (8, 128) fp32 tile; the default 256^3 keeps
 the working set (G + Q + S tiles + fp32 acc + norms) around 1 MB of VMEM.
+
+Under ZeRO-1 (DESIGN.md §9) the kernel is invoked *inside* a shard_map on a
+per-device row block ``(rows / N_dp, n)`` — row-blocking only shrinks the
+``i`` grid dimension, and the ``norms`` output is then a row-partial
+statistic that the caller (core/fused_step.select_and_project) completes
+with one ``(n,)``-sized psum over the data axes. The kernel itself never
+communicates.
 """
 from __future__ import annotations
 

@@ -141,9 +141,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         # iter-1 (kept): shard_map sequence-parallel attention.
         # iter-2 (sequence-parallel residual stream) was REFUTED under the
         # FSDP x TP layout — see EXPERIMENTS.md §Perf — so seq_parallel
-        # stays off.
+        # stays off (the scoped policy below pins it).
         cfg = dataclasses.replace(cfg, attn_sp=True)
-    sh.set_seq_parallel(False)
     spec = SHAPES[shape_name]
     # pure_dp applies to TRAIN cells only: at 32k-sequence inference the
     # model axis must keep spreading attention work — measured regression
@@ -157,7 +156,6 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         eff_layout = cfg.decode_layout
     else:
         eff_layout = "fsdp_tp"
-    sh.set_layout_policy(eff_layout)
     if eff_layout == "pure_dp":
         # batch shards over every axis -> no microbatch loop needed
         cfg = dataclasses.replace(cfg, train_microbatch=0)
@@ -175,7 +173,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.perf_counter()
-    with compat.set_mesh(mesh):
+    # layout scoped per cell (not a process-global): concurrent run_cell
+    # calls under different layouts cannot race each other's specs
+    with sh.use_policy(layout=eff_layout, seq_parallel=False), \
+            compat.set_mesh(mesh):
         if spec.kind == "train":
             lowered = _train_lowered(cfg, mesh, optimizer, rank, shape_name,
                                      accum_dtype)

@@ -19,6 +19,10 @@ import sys
 import jax
 import jax.numpy as jnp
 
+# the presets built on ProjectedAdamRule — the ones --fused/--zero/the
+# adaptive controllers apply to (one definition; three flags check it)
+PROJECTED_ADAM_FAMILY = ("dct_adamw", "ldadamw", "galore", "frugal", "fira")
+
 
 def build(argv=None):
     ap = argparse.ArgumentParser()
@@ -32,6 +36,12 @@ def build(argv=None):
     ap.add_argument("--fused", default=None,
                     choices=["auto", "on", "fft", "off"],
                     help="fused-step dispatch for the projected-Adam family")
+    ap.add_argument("--zero", default="off", choices=["off", "1"],
+                    help="ZeRO-1 partitioning of the low-rank optimizer "
+                         "state across the data axes; the fused step runs "
+                         "per-shard inside shard_map and updates are "
+                         "all-gathered (index-based projector, i.e. "
+                         "dct_adamw; >1 device; see docs/distributed.md)")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--seq-len", type=int, default=512)
@@ -83,15 +93,38 @@ def main(argv=None) -> int:
     if args.optimizer != "adamw":
         opt_kw["rank"] = args.rank
     if args.fused is not None:
-        if args.optimizer not in ("dct_adamw", "ldadamw", "galore",
-                                  "frugal", "fira"):
+        if args.optimizer not in PROJECTED_ADAM_FAMILY:
             raise SystemExit(f"--fused applies to the projected-Adam family "
                              f"only, not {args.optimizer!r}")
         opt_kw["fused"] = args.fused
     adaptive = args.adaptive_rank or args.adaptive_refresh
+    zero_cfg = None
+    mesh = None
+    if args.zero != "off":
+        if args.optimizer != "dct_adamw":
+            # only index-based projectors are zero_shardable; the other
+            # family presets use power/svd and would silently keep every
+            # leaf replicated (same precedent as --adaptive-refresh)
+            raise SystemExit("--zero needs an index-based projector (dct); "
+                             "use --optimizer dct_adamw, not "
+                             f"{args.optimizer!r}")
+        if adaptive:
+            # a controller rebuild re-inits + migrates sharded state; that
+            # composition is untested — fail loudly rather than subtly
+            raise SystemExit("--zero cannot be combined with "
+                             "--adaptive-rank/--adaptive-refresh yet")
+        from repro.parallel.zero import ZeroConfig
+        zero_cfg = ZeroConfig(mode=args.zero)
+        opt_kw["zero"] = zero_cfg
+        if jax.device_count() > 1:
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((jax.device_count(),), ("data",))
+        else:
+            print("[train] --zero requested with a single visible device; "
+                  "state stays replicated (on CPU, set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N to shard)")
     telemetry_on = args.telemetry != "off" or adaptive
-    if adaptive and args.optimizer not in ("dct_adamw", "ldadamw", "galore",
-                                           "frugal", "fira"):
+    if adaptive and args.optimizer not in PROJECTED_ADAM_FAMILY:
         raise SystemExit("--adaptive-rank/--adaptive-refresh apply to the "
                          f"projected-Adam family only, not "
                          f"{args.optimizer!r}")
@@ -174,14 +207,41 @@ def main(argv=None) -> int:
     else:
         opt = make_optimizer()
         step_fn = make_step(opt)
+
+        def init_fn():
+            return init_state(cfg, opt, jax.random.PRNGKey(args.seed))
+
+        if mesh is not None:
+            # ZeRO-1: derive the partitioned placement (moments/EF split
+            # over the data axis) and install it at init; the Trainer also
+            # uses it to re-partition on checkpoint restore, so the DP
+            # width may change across restarts (docs/distributed.md)
+            from repro.parallel import sharding as sh
+            from repro.train.steps import TrainState
+            from jax.sharding import PartitionSpec as P
+
+            state_sds = jax.eval_shape(init_fn)
+            p_specs = sh.params_specs(state_sds.params, mesh)
+            o_specs = sh.opt_state_specs(state_sds.opt_state,
+                                         state_sds.params, p_specs,
+                                         zero=zero_cfg, mesh=mesh)
+            shardings = sh.named_shardings(
+                TrainState(P(), p_specs, o_specs), mesh)
+            trainer_kw["state_shardings"] = shardings
+            base_init = init_fn
+            init_fn = lambda: jax.device_put(base_init(), shardings)  # noqa: E731
+
         trainer = Trainer(
-            train_step=step_fn,
-            init_state_fn=lambda: init_state(cfg, opt,
-                                             jax.random.PRNGKey(args.seed)),
+            train_step=step_fn, init_state_fn=init_fn,
             batch_fn=lambda s: batch_fn(jnp.int32(s)), **trainer_kw)
 
     try:
-        state = trainer.run(total_steps=args.steps)
+        if mesh is not None:
+            from repro.parallel import compat
+            with compat.set_mesh(mesh):
+                state = trainer.run(total_steps=args.steps)
+        else:
+            state = trainer.run(total_steps=args.steps)
     finally:
         if sink is not None:
             sink.close()

@@ -129,6 +129,13 @@ class MatrixRule:
 
     needs_shared_basis: bool = False
 
+    @property
+    def zero_shardable(self) -> bool:
+        """Whether this rule's update is row-parallel given psum'd column
+        statistics — the precondition for ZeRO-1 partitioning of its state
+        (repro.parallel.zero). Rules opt in explicitly."""
+        return False
+
 
 class FullAdamLeaf(NamedTuple):
     mom: AdamMoments
@@ -144,12 +151,37 @@ class Context:
     # per-leaf StatsScope. None = telemetry off -> rules skip stat
     # construction entirely, so the traced graph is unchanged.
     stats: Any = None
+    # distributed execution (repro.parallel.zero, DESIGN.md §9):
+    # ``zero`` carries the ZeroConfig installed by ``as_optimizer`` —
+    # lowrank_project resolves it against the active mesh and wraps
+    # eligible leaves in shard_map. ``axis`` is set *inside* that
+    # shard_map to the mesh axes the oriented row dim is split over, so
+    # rules/psum-aware helpers know which reductions span shards.
+    zero: Any = None
+    axis: tuple[str, ...] | None = None
+    # set together with ``axis``: the caller already right-oriented the
+    # gradient block (projected dim last). Rules must then skip their own
+    # ``orient_right`` — a row *block*'s aspect ratio can differ from the
+    # global leaf's, so re-deciding orientation locally would transpose
+    # shard-dependent leaves.
+    oriented: bool = False
 
     def record_stats(self, stats) -> None:
         """Emit this leaf's SubspaceStats into the active collector (no-op
         when telemetry is off)."""
         if self.stats is not None:
             self.stats.record(stats)
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        """Sum a row-block-local reduction across the ZeRO shards.
+
+        Identity outside shard_map (``axis`` unset) — the traced graph is
+        then unchanged from the replicated path. Delegates to the single
+        shared :func:`repro.core.selection.allsum` definition.
+        """
+        from repro.core.selection import allsum
+
+        return allsum(x, self.axis)
 
     @property
     def wants_stats(self) -> bool:

@@ -114,6 +114,21 @@ class ProjectedAdamRule(MatrixRule):
             raise ValueError(
                 f"update_interval must be >= 1, got {self.update_interval}")
 
+    @property
+    def zero_shardable(self) -> bool:
+        """Index-into-shared-basis projectors keep only ``r`` integers of
+        projector state and their whole step is row-parallel given one
+        psum'd column statistic — the ZeRO-1 precondition (DESIGN.md §9).
+        Dense-basis refreshes (svd) need all rows and stay replicated.
+
+        The FIRA residual is also excluded: its ``phi`` scaling feeds
+        psum'd norms into the *update arithmetic* (not just ranking), and
+        a psum of per-shard partial sums rounds differently than the
+        replicated single-pass reduction — it would break the bit-exact
+        sharded/replicated contract the parity suite pins."""
+        return (self.projector in ("dct", "randperm")
+                and self.residual != "fira")
+
     def _proj(self):
         return Projector(kind=self.projector, r=self.rank, norm=self.ranking_norm)
 
@@ -136,7 +151,10 @@ class ProjectedAdamRule(MatrixRule):
 
     def update(self, g, state, param, ctx):
         p = self._proj()
-        gf, transposed = orient_right(g.astype(jnp.float32))
+        if ctx.oriented:        # ZeRO row block: already right-oriented
+            gf, transposed = g.astype(jnp.float32), False
+        else:
+            gf, transposed = orient_right(g.astype(jnp.float32))
         rows, cols = gf.shape[-2], gf.shape[-1]
         r = min(self.rank, cols)
         q = ctx.basis(cols, jnp.float32) if p.needs_shared_basis else None
@@ -169,12 +187,13 @@ class ProjectedAdamRule(MatrixRule):
             # keep step: no selection happened, so neither margin nor
             # overlap is a measurement — both report the -1 sentinel
             # (consumers gate on >= 0). Col energies from the skinny g_low
-            # (an (m, r) reduction).
+            # (an (m, r) reduction). Row reductions psum across ZeRO
+            # shards (ctx.axis; identity when replicated).
             return (-jnp.ones(batch, jnp.float32),
                     -jnp.ones(batch, jnp.float32),
-                    jnp.sum(gf * gf, axis=(-2, -1)),
+                    ctx.psum(jnp.sum(gf * gf, axis=(-2, -1))),
                     None if g_low is None
-                    else jnp.sum(g_low * g_low, axis=-2))
+                    else ctx.psum(jnp.sum(g_low * g_low, axis=-2)))
 
         def refresh_aux(new_proj, norms_sq):
             margin = (topr_margin(norms_sq, r) if norms_sq is not None
@@ -187,7 +206,7 @@ class ProjectedAdamRule(MatrixRule):
             # ≤3% overhead gate (telemetry_overhead bench) catches
             total = (jnp.sum(jax.lax.optimization_barrier(norms_sq),
                              axis=-1) if norms_sq is not None
-                     else jnp.sum(gf * gf, axis=(-2, -1)))
+                     else ctx.psum(jnp.sum(gf * gf, axis=(-2, -1))))
             # selected column energies ||G q_i||^2 == norms_sq[idx]: a free
             # (n,) -> (r,) gather of the already-reduced ranking statistic,
             # NOT a fresh reduction over S/g_low (that extra S-sized read
@@ -202,7 +221,7 @@ class ProjectedAdamRule(MatrixRule):
             def refresh(_):
                 sp = fused_step.select_and_project(
                     gf, q, r, norm=self.ranking_norm, mode=mode,
-                    return_norms=want_stats)
+                    return_norms=want_stats, psum_axes=ctx.axis)
                 new_proj, g_low = sp[0], sp[1]
                 out = (new_proj, g_low)
                 if self.rotate:
@@ -220,7 +239,8 @@ class ProjectedAdamRule(MatrixRule):
                 return out + ((keep_aux(g_low),) if want_stats else ())
         else:
             def refresh(_):
-                new_proj = p.update(gf, state.proj, shared_q=q, key=ctx.key)
+                new_proj = p.update(gf, state.proj, shared_q=q, key=ctx.key,
+                                    psum_axes=ctx.axis)
                 out = (new_proj,)
                 if self.rotate:
                     rot = rotation_matrix(state.proj, new_proj, p, cols,
@@ -284,10 +304,13 @@ class ProjectedAdamRule(MatrixRule):
             elif self.residual == "sign":
                 d = d + jnp.sign(resid)                         # FRUGAL state-free
             elif self.residual == "fira":
-                phi = (jnp.linalg.norm(u_low, axis=(-2, -1), keepdims=True)
-                       / (jnp.linalg.norm(g_low, axis=(-2, -1), keepdims=True)
-                          + self.eps))
-                d = d + phi * resid                             # FIRA scaling
+                # sqrt-of-psum'd-square-sums == jnp.linalg.norm when
+                # unsharded; under ZeRO the norms span all row shards
+                u_n = jnp.sqrt(ctx.psum(
+                    jnp.sum(u_low * u_low, axis=(-2, -1), keepdims=True)))
+                g_n = jnp.sqrt(ctx.psum(
+                    jnp.sum(g_low * g_low, axis=(-2, -1), keepdims=True)))
+                d = d + (u_n / (g_n + self.eps)) * resid        # FIRA scaling
 
         if want_stats:
             # every term is resident already: selected column energies and
@@ -296,7 +319,7 @@ class ProjectedAdamRule(MatrixRule):
             # never a reduction over the materialized residual
             col_e = stats_aux[3]                                # (..., r)
             if col_e is None:      # reference path: reduce the skinny g_low
-                col_e = jnp.sum(g_low * g_low, axis=-2)
+                col_e = ctx.psum(jnp.sum(g_low * g_low, axis=-2))
             sel_sq = jnp.sum(col_e, axis=-1)
             total_sq = stats_aux[2]
             if self.residual == "ef":
@@ -357,14 +380,15 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
               ef_dtype: str = "q8", b1: float = 0.9, b2: float = 0.999,
               eps: float = 1e-8, exact_rotation_matmul: bool = False,
               fused: str = "auto", basis_mode: str = "stored",
-              label_fn=None, overrides: dict | None = None) -> Optimizer:
+              label_fn=None, overrides: dict | None = None,
+              zero=None) -> Optimizer:
     """The paper's DCT-AdamW (Algorithm 2). ``fused`` selects the execution
     layer: "auto" | "on" (Pallas kernels) | "fft" (Makhoul host fast path) |
     "off" (jnp reference) — see core/fused_step.py / DESIGN.md §3.
     ``overrides``: per-leaf-path rule field overrides (e.g. per-layer ranks
     from the adaptive rank allocator, DESIGN.md §8)."""
     hk = dict(weight_decay=weight_decay, basis_mode=basis_mode,
-              overrides=overrides)
+              overrides=overrides, zero=zero)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector="dct",
@@ -378,12 +402,12 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
 def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
             error_feedback: bool = True, b1: float = 0.9, b2: float = 0.999,
             eps: float = 1e-8, fused: str = "auto", label_fn=None,
-            overrides: dict | None = None) -> Optimizer:
+            overrides: dict | None = None, zero=None) -> Optimizer:
     """LDAdamW baseline: block power iteration, per-step subspace, rotation
     via real r x r matmul of two stored projection matrices. ``fused``
     covers the EF quantize/dequant kernels (the power projector itself
     keeps the reference math)."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector="power", update_interval=1,
@@ -397,9 +421,9 @@ def galore(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
            fused: str = "auto", label_fn=None,
-           overrides: dict | None = None) -> Optimizer:
+           overrides: dict | None = None, zero=None) -> Optimizer:
     """GaLore baseline: SVD every T_u steps, residual discarded, no rotation."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
@@ -412,10 +436,10 @@ def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
            fused: str = "auto", label_fn=None,
-           overrides: dict | None = None) -> Optimizer:
+           overrides: dict | None = None, zero=None) -> Optimizer:
     """FRUGAL baseline: state-full low-rank AdamW + state-free SignSGD on the
     residual. ``projector`` in {svd, dct, random, randperm} (paper Table 6)."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
@@ -428,9 +452,9 @@ def fira(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
          weight_decay: float = 0.01, projector: str = "svd",
          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
          fused: str = "auto", label_fn=None,
-         overrides: dict | None = None) -> Optimizer:
+         overrides: dict | None = None, zero=None) -> Optimizer:
     """FIRA baseline: low-rank AdamW + norm-scaled full-rank residual."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,

@@ -405,13 +405,25 @@ def lowrank_project(rule: MatrixRule, *,
             params)
 
     def update(updates, state, params, ctx):
+        from repro.parallel import zero as zero_mod
+
+        # ZeRO-1 (DESIGN.md §9): resolve the config once per update against
+        # the active mesh; eligible leaves run their rule inside shard_map
+        # on row blocks, the rest fall through to the replicated path.
+        zctx = zero_mod.resolve(ctx.zero)
+
         def leaf(kp, g, s, p):
             path = path_str(kp)
+            r = rule_for(path)
             leaf_ctx = dataclasses.replace(
                 ctx, key=leaf_key(ctx.key, path),
                 stats=ctx.stats.scope(path) if ctx.stats is not None
                 else None)
-            return rule_for(path).update(g, s, p, leaf_ctx)
+            if (zctx is not None and r.zero_shardable
+                    and zero_mod.eligible(p.shape, zctx.n_shards)):
+                return zero_mod.sharded_leaf_update(r, g, s, p, leaf_ctx,
+                                                    zctx)
+            return r.update(g, s, p, leaf_ctx)
 
         pairs = jax.tree_util.tree_map_with_path(leaf, updates, state, params)
         d = jax.tree.map(lambda g, pr: pr[0], updates, pairs)
@@ -447,7 +459,7 @@ class ChainState(NamedTuple):
 
 
 def as_optimizer(transform: GradientTransform, *, seed: int = 0,
-                 basis_mode: str = "stored") -> Optimizer:
+                 basis_mode: str = "stored", zero=None) -> Optimizer:
     """Close a transform into the ``Optimizer(init, update)`` interface.
 
     The runtime owns the global step, the PRNG key (per-step fold) and the
@@ -455,6 +467,12 @@ def as_optimizer(transform: GradientTransform, *, seed: int = 0,
     ``(n, n)`` DCT-II matrix per distinct order requested by the stack
     (the paper's whole-model shared basis); ``"onthefly"`` stores nothing
     and lets ``Context.basis`` recompute inside the step.
+
+    ``zero``: a :class:`repro.parallel.zero.ZeroConfig` enabling ZeRO-1
+    partitioning of eligible low-rank leaf state across the data axes
+    (DESIGN.md §9). It rides the :class:`Context` into every transform;
+    ``lowrank_project`` resolves it against the mesh active at trace time,
+    so one optimizer object works on any topology (including none).
     """
     if basis_mode not in ("stored", "onthefly"):
         raise ValueError(f"unknown basis_mode {basis_mode!r}; expected "
@@ -479,7 +497,7 @@ def as_optimizer(transform: GradientTransform, *, seed: int = 0,
         # into it and the caller returns collector.tree() as a jit output
         ctx = Context(step=step, bases=state.bases,
                       key=jax.random.fold_in(state.key, step),
-                      stats=active_collector())
+                      stats=active_collector(), zero=zero)
         updates, leaves = transform.update(grads, state.leaves, params, ctx)
         return updates, ChainState(step=step, key=state.key,
                                    bases=state.bases, leaves=leaves)
@@ -500,6 +518,7 @@ def matrix_optimizer(
     seed: int = 0,
     fullrank_weight_decay: bool = True,
     overrides: dict[str, dict] | None = None,
+    zero=None,
 ) -> Optimizer:
     """The classic matrix-optimizer preset, rebuilt as a chain: route
     matrix leaves to ``rule`` and everything else to full-rank Adam, then
@@ -507,7 +526,8 @@ def matrix_optimizer(
     the legacy ``make_matrix_optimizer`` (bit-for-bit, see
     tests/test_transform_api.py). ``overrides`` is the per-leaf-path rule
     field override map forwarded to :func:`lowrank_project` (the adaptive
-    rank/refresh controllers' plug point)."""
+    rank/refresh controllers' plug point); ``zero`` is the ZeRO-1 state
+    partitioning config forwarded to :func:`as_optimizer`."""
     routes = {"lowrank": lowrank_project(rule, overrides=overrides),
               "full": scale_by_adam(b1, b2, eps)}
     if fullrank_weight_decay:
@@ -520,4 +540,4 @@ def matrix_optimizer(
                              add_decayed_weights(weight_decay, schedule=lr)),
             "full": chain(routes["full"], scale_by_learning_rate(lr)),
         }, label_fn)
-    return as_optimizer(t, seed=seed, basis_mode=basis_mode)
+    return as_optimizer(t, seed=seed, basis_mode=basis_mode, zero=zero)

@@ -11,10 +11,18 @@ Parameter sharding follows the MaxText FSDP x TP recipe:
   * embeddings  (vocab, d_model)   -> P(tp, fsdp)   (vocab-sharded logits)
   * expert weights (L, E, d, f)    -> P(None, tp, fsdp, None)  (EP on tp axis)
   * 1D params                      -> replicated
+
+The layout policy is a :class:`ShardingPolicy` carried in a
+``contextvars.ContextVar`` — scope one with ``use_policy(layout=...)``.
+Context variables are per-thread (and per-asyncio-task), so concurrent
+dry-runs deriving specs under different layouts cannot race the way the
+old module-global ``_LAYOUT`` setter could.
 """
 from __future__ import annotations
 
-import re
+import contextlib
+import contextvars
+import dataclasses
 from typing import Any
 
 import jax
@@ -26,34 +34,70 @@ from repro.parallel import compat
 DP_AXES = ("pod", "data")   # batch/FSDP axes (present subset is used)
 TP_AXIS = "model"
 
-# layout policy (§Perf iter): "fsdp_tp" (default) shards params FSDP x TP;
-# "pure_dp" replicates params and data-parallelizes the batch over EVERY
-# mesh axis — the right layout for small archs (whisper/rwkv) where
-# 256-way model sharding makes shards tiny and collectives dominant.
-_LAYOUT = "fsdp_tp"
-_SEQ_PARALLEL = False
+LAYOUTS = ("fsdp_tp", "pure_dp", "decode_tp")
 
 
-def set_layout_policy(name: str):
-    global _LAYOUT
-    assert name in ("fsdp_tp", "pure_dp", "decode_tp"), name
-    _LAYOUT = name
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Explicit layout policy object (replaces the old mutable globals).
+
+    ``layout`` (§Perf iter): "fsdp_tp" (default) shards params FSDP x TP;
+    "pure_dp" replicates params and data-parallelizes the batch over EVERY
+    mesh axis — the right layout for small archs (whisper/rwkv) where
+    256-way model sharding makes shards tiny and collectives dominant;
+    "decode_tp" is the decode-time Megatron layout (§Perf iter-6).
+
+    ``seq_parallel`` (§Perf iter-2): shard the residual stream's sequence
+    dim over the `model` axis (Megatron-SP style) — activations between
+    blocks stay sequence-sharded, so GSPMD stops re-gathering them around
+    attention.
+    """
+
+    layout: str = "fsdp_tp"
+    seq_parallel: bool = False
+
+    def __post_init__(self):
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {self.layout!r}; "
+                             f"allowed: {LAYOUTS}")
+
+
+_POLICY: contextvars.ContextVar[ShardingPolicy] = contextvars.ContextVar(
+    "repro_sharding_policy", default=ShardingPolicy())
+
+
+def current_policy() -> ShardingPolicy:
+    return _POLICY.get()
+
+
+@contextlib.contextmanager
+def use_policy(policy: ShardingPolicy | None = None, **replacements):
+    """Scope a layout policy: ``with use_policy(layout="pure_dp"): ...``.
+
+    Either pass a full :class:`ShardingPolicy` or field replacements over
+    the current one. Restores the previous policy on exit; per-thread, so
+    concurrent derivations under different layouts don't interfere.
+    """
+    if policy is None:
+        policy = dataclasses.replace(current_policy(), **replacements)
+    elif replacements:
+        raise TypeError("pass either a policy object or field replacements,"
+                        " not both")
+    token = _POLICY.set(policy)
+    try:
+        yield policy
+    finally:
+        _POLICY.reset(token)
 
 
 def layout_policy() -> str:
-    return _LAYOUT
-
-
-def set_seq_parallel(on: bool):
-    """§Perf iter-2: shard the residual stream's sequence dim over the
-    `model` axis (Megatron-SP style) — activations between blocks stay
-    sequence-sharded, so GSPMD stops re-gathering them around attention."""
-    global _SEQ_PARALLEL
-    _SEQ_PARALLEL = bool(on)
+    """Current layout name (read-only view of :func:`current_policy`)."""
+    return current_policy().layout
 
 
 def seq_parallel() -> bool:
-    return _SEQ_PARALLEL
+    """Current sequence-parallel flag (read-only view)."""
+    return current_policy().seq_parallel
 
 
 def active_mesh():
@@ -82,9 +126,10 @@ def logical_to_spec(axes: tuple, mesh=None) -> P:
     'pure_dp' layout, 'batch' spans every mesh axis and 'tp' replicates.
     """
     mesh = mesh or active_mesh()
+    policy = current_policy()
     dp = dp_axes(mesh)
     tp = tp_axis(mesh)
-    if _LAYOUT == "pure_dp":
+    if policy.layout == "pure_dp":
         batch_axes = tuple(a for a in (*dp, tp) if a) or None
         tp = None
     else:
@@ -96,7 +141,7 @@ def logical_to_spec(axes: tuple, mesh=None) -> P:
         elif a == "tp":
             out.append(tp)
         elif a == "sp":
-            out.append(tp if _SEQ_PARALLEL else None)
+            out.append(tp if policy.seq_parallel else None)
         elif a is None:
             out.append(None)
         else:
@@ -133,9 +178,11 @@ def _fit_spec(axes: tuple, shape: tuple[int, ...], mesh) -> P:
     return P(*out)
 
 
-def param_spec(path: str, shape: tuple[int, ...], mesh=None) -> P:
+def param_spec(path: str, shape: tuple[int, ...], mesh=None,
+               policy: ShardingPolicy | None = None) -> P:
     mesh = mesh or active_mesh()
-    if _LAYOUT == "pure_dp":
+    policy = policy or current_policy()
+    if policy.layout == "pure_dp":
         return P()              # params replicated; batch over all axes
     dp = dp_axes(mesh)
     dp = dp if dp else None
@@ -150,7 +197,7 @@ def param_spec(path: str, shape: tuple[int, ...], mesh=None) -> P:
         return P()
     is_row = any(seg in ("wd", "wo", "out_proj")
                  for seg in lpath.split("/"))
-    if _LAYOUT == "decode_tp":
+    if policy.layout == "decode_tp":
         # §Perf iter-6: decode-time Megatron layout over the COMBINED
         # (dp x tp) axes — every matrix column-parallel (d_out over all
         # chips), down/out projections row-parallel. A decode step then
@@ -189,11 +236,13 @@ def param_spec(path: str, shape: tuple[int, ...], mesh=None) -> P:
     return P()
 
 
-def params_specs(params: Any, mesh=None) -> Any:
+def params_specs(params: Any, mesh=None,
+                 policy: ShardingPolicy | None = None) -> Any:
     from repro.optim.common import path_str
 
+    policy = policy or current_policy()
     return jax.tree_util.tree_map_with_path(
-        lambda kp, p: param_spec(path_str(kp), p.shape, mesh), params
+        lambda kp, p: param_spec(path_str(kp), p.shape, mesh, policy), params
     )
 
 
@@ -242,12 +291,14 @@ def _axis_size(mesh, axes) -> int:
     return n
 
 
-def batch_specs_tree(batch, mesh) -> Any:
+def batch_specs_tree(batch, mesh,
+                     policy: ShardingPolicy | None = None) -> Any:
     """Input batch: leading batch dim over the DP axes (if divisible);
     under 'pure_dp' over every mesh axis, falling back to dp-only when the
     batch doesn't divide the full device count (prefill/decode shapes)."""
+    policy = policy or current_policy()
     dp_only = dp_axes(mesh) or None
-    if _LAYOUT == "pure_dp":
+    if policy.layout == "pure_dp":
         all_axes = tuple(a for a in (*dp_axes(mesh), tp_axis(mesh)) if a) \
             or None
         candidates = (all_axes, dp_only)
@@ -317,7 +368,7 @@ def telemetry_specs(tree: Any) -> Any:
     return jax.tree.map(lambda _: P(), tree)
 
 
-def opt_state_specs(opt_state, params, p_specs):
+def opt_state_specs(opt_state, params, p_specs, *, zero=None, mesh=None):
     """PartitionSpecs for an optimizer state given param specs.
 
     ``params`` drives the association; each per-param state subtree
@@ -331,8 +382,41 @@ def opt_state_specs(opt_state, params, p_specs):
     inject-hyperparams records). The walk descends combinator containers
     until a params-shaped subtree matches; anything unmatched (hyperparam
     scalars, empty states) replicates.
+
+    ``zero`` (a :class:`repro.parallel.zero.ZeroConfig`) switches eligible
+    projected-Adam leaves to the ZeRO-1 placement (DESIGN.md §9): moments,
+    EF payloads and per-row EF scales partition their oriented row dim
+    over the config's data axes — matching the shard_map layout the
+    distributed step runs with — while index sets and scalars replicate.
+    Ineligible leaves (dense-basis projector state, rows not divisible by
+    the shard count) keep the shape-matched placement.
     """
+    zinfo = None
+    if zero is not None and zero.active:
+        from repro.parallel import zero as zero_mod
+
+        mesh = mesh or active_mesh()
+        axes = zero_mod.present_axes(mesh, zero)
+        n_shards = _axis_size(mesh, axes) if axes else 1
+        if n_shards > 1:
+            zinfo = (zero_mod, axes, n_shards)
+
+    def _zero_partitioned(p, leaf_state):
+        """ProjAdamLeaf with index-typed projector state whose rows split
+        evenly — exactly the leaves the sharded update path claims."""
+        if zinfo is None:
+            return False
+        from repro.optim.projected_adam import ProjAdamLeaf
+
+        zero_mod, axes, n_shards = zinfo
+        return (isinstance(leaf_state, ProjAdamLeaf)
+                and jnp.issubdtype(leaf_state.proj.dtype, jnp.integer)
+                and zero_mod.eligible(p.shape, n_shards))
+
     def leaf_specs(p, p_spec, leaf_state):
+        if _zero_partitioned(p, leaf_state):
+            zero_mod, axes, _ = zinfo
+            return zero_mod.state_specs(p.shape, leaf_state, axes)
         return jax.tree.map(
             lambda s: _match_state_spec(p.shape, p_spec, s.shape), leaf_state
         )

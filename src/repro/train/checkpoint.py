@@ -10,6 +10,13 @@ Checkpoints are saved *unsharded-logical* (fully addressable host arrays):
 restore takes the target mesh/shardings and uses jax.device_put with the
 new NamedShardings, so the data-parallel width may change between runs
 (elastic restart — DESIGN.md §5).
+
+ZeRO-partitioned optimizer state (DESIGN.md §9) rides the same contract:
+``_flatten``'s device_get gathers each row-partitioned moment/EF leaf to
+one logical host array, and restore re-partitions onto the *current*
+topology's specs (``sharding.opt_state_specs(zero=...)``) — save on a
+(2, 4) mesh, resume on (4, 2) or a different DP width entirely
+(asserted in tests/test_zero_parity.py).
 """
 from __future__ import annotations
 

@@ -19,6 +19,13 @@ Observability and control plug in through three hooks (DESIGN.md §8):
     JSON-serializable controller state checkpointed in the manifest and
     restored *before* ``init_state_fn`` runs, because restored controller
     state determines the optimizer-state shapes of the restore target.
+
+Distributed state (DESIGN.md §9): checkpoints are saved mesh-agnostic
+(gathered host arrays), so a ZeRO-partitioned run hands the Trainer its
+``state_shardings`` (a TrainState-shaped tree of NamedShardings for the
+*current* mesh) and restore re-partitions onto it — the DP width may
+change between the save and the resume (elastic restart / resharding on
+topology change).
 """
 from __future__ import annotations
 
@@ -40,7 +47,8 @@ class Trainer:
                  keep: int = 3, log_every: int = 10,
                  log_fn: Callable[[str], None] = print,
                  log_metrics: Callable[[dict], None] | None = None,
-                 control_hook=None, extra_state=None):
+                 control_hook=None, extra_state=None,
+                 state_shardings=None):
         self.train_step = train_step
         self.init_state_fn = init_state_fn
         self.batch_fn = batch_fn
@@ -51,6 +59,7 @@ class Trainer:
         self.log_metrics = log_metrics
         self.control_hook = control_hook
         self.extra_state = extra_state
+        self.state_shardings = state_shardings
         self._preempted = False
         self._window: list[float] = []
 
@@ -99,7 +108,8 @@ class Trainer:
                     self.extra_state.load_state_dict(extra)
         state = self.init_state_fn()
         if resume_step is not None:
-            state = self.ckpt.restore(resume_step, state)
+            state = self.ckpt.restore(resume_step, state,
+                                      shardings=self.state_shardings)
             start = resume_step
             self.log(f"[trainer] resumed from checkpoint step {resume_step}")
 

@@ -70,12 +70,11 @@ _SCRIPT = textwrap.dedent("""
     # ---- 3. layout policy loss parity -------------------------------------
     vals = {}
     for layout in ("fsdp_tp", "pure_dp"):
-        sh.set_layout_policy(layout)
-        with set_mesh(mesh):
+        with sh.use_policy(layout=layout), set_mesh(mesh):
             state = init_state(cfg, opt, jax.random.PRNGKey(0))
             _, m = jax.jit(make_train_step(cfg, opt))(state, batch)
             vals[layout] = float(m["loss"])
-    sh.set_layout_policy("fsdp_tp")
+    assert sh.layout_policy() == "fsdp_tp"   # scoped policy restored
     assert abs(vals["pure_dp"] - vals["fsdp_tp"]) < 1e-4, vals
     print("layout loss parity OK", vals)
 
@@ -90,14 +89,12 @@ _SCRIPT = textwrap.dedent("""
     tok = jnp.asarray(rng.integers(0, 64, (4,)), jnp.int32)
     outs = {}
     for layout in ("fsdp_tp", "decode_tp"):
-        sh.set_layout_policy(layout)
-        with set_mesh(mesh):
+        with sh.use_policy(layout=layout), set_mesh(mesh):
             cache = T.init_cache(moe_cfg, 4, 16)
             lg, _ = jax.jit(
                 lambda p, c, t: T.decode_step(p, c, t, jnp.int32(0), moe_cfg)
             )(params, cache, tok)
             outs[layout] = np.asarray(lg)
-    sh.set_layout_policy("fsdp_tp")
     np.testing.assert_allclose(outs["decode_tp"], outs["fsdp_tp"],
                                atol=2e-5, rtol=1e-4)
     print("decode_tp logits parity OK")

@@ -1,0 +1,173 @@
+"""opt_state_specs coverage: combinator state x layouts x runtimes.
+
+The sharding layer must derive placements for the optimizer state of BOTH
+runtimes — the legacy monolithic harness (``HarnessState``) and the
+transform-chain runtime (``ChainState`` nesting chain tuples / partition
+dicts / inject-hyperparams records) — under all three layout policies,
+including the q8 error-feedback buffers (int8 payload follows the
+transpose-oriented param spec, per-row scales keep the row spec) and the
+ZeRO-1 placement mode (DESIGN.md §9).
+
+Spec derivation is pure shape/name logic, so a lightweight mesh stand-in
+(axis_names + shape) suffices — no forced host devices.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.common import make_matrix_optimizer
+from repro.optim.projected_adam import ProjectedAdamRule
+from repro.optim.transform import (
+    as_optimizer,
+    inject_hyperparams,
+    matrix_optimizer,
+)
+from repro.parallel import sharding as sh
+from repro.parallel.zero import ZeroConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FakeMesh:
+    """Just enough mesh surface for spec derivation (names + sizes)."""
+
+    sizes: tuple[tuple[str, int], ...] = (("pod", 2), ("data", 4),
+                                          ("model", 2))
+
+    @property
+    def axis_names(self):
+        return tuple(n for n, _ in self.sizes)
+
+    @property
+    def shape(self):
+        return dict(self.sizes)
+
+
+MESH = FakeMesh()
+DP = ("pod", "data")
+
+PARAMS = {
+    "blocks": {
+        "wq": jnp.zeros((3, 64, 48), jnp.float32),   # stacked, rows first
+        "wo": jnp.zeros((48, 64), jnp.float32),      # transposed orientation
+    },
+    "embed": jnp.zeros((100, 64), jnp.float32),      # full-rank route
+    "norm": jnp.zeros((64,), jnp.float32),           # 1D full-rank route
+}
+
+RULE = ProjectedAdamRule(rank=8, residual="ef", ef_dtype="q8")
+
+
+def _build(runtime: str):
+    if runtime == "legacy":
+        return make_matrix_optimizer(RULE, 0.01)
+    return matrix_optimizer(RULE, 0.01)
+
+
+def _lowrank_leaf(state, runtime: str, name: str):
+    leaves = state.leaves
+    if runtime == "legacy":
+        return leaves["blocks"][name]
+    return leaves[0]["lowrank"]["blocks"][name]
+
+
+@pytest.mark.parametrize("layout", sh.LAYOUTS)
+@pytest.mark.parametrize("runtime", ["legacy", "chain"])
+def test_opt_state_specs_all_layouts(runtime, layout):
+    opt = _build(runtime)
+    state = jax.eval_shape(opt.init, PARAMS)
+    with sh.use_policy(layout=layout):
+        p_specs = sh.params_specs(PARAMS, MESH)
+        o_specs = sh.opt_state_specs(state, PARAMS, p_specs)
+
+    # runtime roots always replicate
+    assert o_specs.step == P() and o_specs.key == P()
+    wq_p = p_specs["blocks"]["wq"]
+    wq = _lowrank_leaf(o_specs, runtime, "wq")
+
+    if layout == "pure_dp":
+        # params replicated -> every state leaf replicated (specs may be
+        # padded with explicit Nones)
+        assert all(all(ax is None for ax in s) for s in jax.tree.leaves(
+            o_specs, is_leaf=lambda x: isinstance(x, P)))
+        return
+
+    # low-rank moments: row spec kept, rank dim replicated
+    assert wq.m == P(wq_p[0], wq_p[1], None) == wq.v
+    # q8 EF: int8 payload is param-oriented (same shape -> same spec);
+    # per-row scales keep the row spec
+    assert wq.ef.q == wq_p
+    assert wq.ef.scale == P(wq_p[0], wq_p[1], None)
+    # indices / inner step replicate
+    assert wq.proj == P() and wq.inner_step == P()
+
+    # transposed leaf: EF is stored oriented (64, 48) against the (48, 64)
+    # param -> the spec swaps the trailing axes of the param spec; the
+    # moments' oriented row dim matches no param dim -> shape matching
+    # replicates them (the ZeRO mode below is what splits these rows)
+    wo_p = p_specs["blocks"]["wo"]
+    wo = _lowrank_leaf(o_specs, runtime, "wo")
+    assert wo.ef.q == P(wo_p[1], wo_p[0])
+    assert wo.m == P(None, None)
+
+    # full-rank Adam moments follow the param spec exactly
+    if runtime == "legacy":
+        emb = o_specs.leaves["embed"]
+    else:
+        emb = o_specs.leaves[0]["full"]["embed"]
+    assert emb.mom.m == p_specs["embed"] == emb.mom.v
+
+
+@pytest.mark.parametrize("runtime", ["legacy", "chain"])
+@pytest.mark.parametrize("layout", sh.LAYOUTS)
+def test_opt_state_specs_zero_mode(runtime, layout):
+    """ZeRO-1 placement: eligible leaves partition rows over the DP axes
+    regardless of layout; indices and ineligible leaves replicate."""
+    opt = _build(runtime)
+    state = jax.eval_shape(opt.init, PARAMS)
+    with sh.use_policy(layout=layout):
+        p_specs = sh.params_specs(PARAMS, MESH)
+        o_specs = sh.opt_state_specs(state, PARAMS, p_specs,
+                                     zero=ZeroConfig(mode="1"), mesh=MESH)
+
+    wq = _lowrank_leaf(o_specs, runtime, "wq")
+    assert wq.m == P(None, DP, None) == wq.v
+    assert wq.ef.q == P(None, DP, None)       # rows, NOT the tp-matched spec
+    assert wq.ef.scale == P(None, DP, None)
+    assert wq.proj == P() and wq.inner_step == P()
+    # transposed leaf: oriented rows (64) split evenly too
+    wo = _lowrank_leaf(o_specs, runtime, "wo")
+    assert wo.m == P(DP, None) and wo.ef.q == P(DP, None)
+
+
+def test_opt_state_specs_zero_ineligible_rows():
+    """Rows not divisible by the shard count keep the shape-matched spec."""
+    params = {"blocks": {"wq": jnp.zeros((36, 20), jnp.float32)}}
+    opt = matrix_optimizer(RULE, 0.01)
+    state = jax.eval_shape(opt.init, params)
+    with sh.use_policy(layout="fsdp_tp"):
+        p_specs = sh.params_specs(params, MESH)
+        o_specs = sh.opt_state_specs(state, params, p_specs,
+                                     zero=ZeroConfig(mode="1"), mesh=MESH)
+    wq = o_specs.leaves[0]["lowrank"]["blocks"]["wq"]
+    p = p_specs["blocks"]["wq"]
+    assert wq.m == P(p[0], None)              # 36 % 8 != 0 -> shape-matched
+
+
+def test_opt_state_specs_inject_hyperparams():
+    """The walk descends inject-hyperparams records: fp32 hyper scalars
+    replicate, the inner partition/chain state still derives per-leaf."""
+    from repro.optim.projected_adam import dct_adamw_transform
+
+    params = {"blocks": dict(PARAMS["blocks"])}   # matrix-leaf pipeline
+    t = inject_hyperparams(dct_adamw_transform)(lr=0.01, rank=8)
+    opt = as_optimizer(t)
+    state = jax.eval_shape(opt.init, params)
+    with sh.use_policy(layout="fsdp_tp"):
+        p_specs = sh.params_specs(params, MESH)
+        o_specs = sh.opt_state_specs(state, params, p_specs)
+    assert o_specs.leaves.hyperparams["lr"] == P()
+    wq = o_specs.leaves.inner[0]["blocks"]["wq"]
+    assert wq.m == P(None, DP, None)

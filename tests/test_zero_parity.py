@@ -1,0 +1,232 @@
+"""ZeRO-1 distributed-step parity (DESIGN.md §9).
+
+Runs in a subprocess with 8 forced host devices (device count is locked at
+first jax init). The partitioned step — rows of every eligible leaf's
+moments/EF split over ('pod', 'data'), the fused select+project+update
+running inside shard_map per shard, one (n,)-sized psum completing the
+column statistic — must produce updates **bit-identical (fp32)** to the
+replicated step: the row-block decomposition is exact, not approximate.
+
+Covered: stacked / odd / transposed-orientation / ineligible leaves, the
+"on" (Pallas interpret) / "fft" / "off" execution modes, q8 + fp32 EF and
+discard residuals, keep-branch steps (T_u > 1), telemetry parity, the
+ZeRO placement specs (per-device byte reduction), and sharded checkpoint
+save -> restore onto a *different* topology (resharding) mid-run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import tempfile
+
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+    from repro.optim.api import get_optimizer
+    from repro.parallel import sharding as sh
+    from repro.parallel.compat import set_mesh
+    from repro.parallel.zero import ZeroConfig
+    from repro.telemetry.stats import collect
+    from repro.train.checkpoint import CheckpointManager
+
+    mesh = make_mesh((2, 4), ("pod", "data"))     # N_dp = 8 over both axes
+    zcfg = ZeroConfig(mode="1")
+    rng = np.random.default_rng(0)
+
+    params = {
+        "w":    jnp.zeros((3, 64, 48), jnp.float32),  # scan-stacked
+        "odd":  jnp.zeros((80, 33), jnp.float32),     # odd dims, rows first
+        "wide": jnp.zeros((33, 80), jnp.float32),     # transposed orientation
+        "bad":  jnp.zeros((36, 20), jnp.float32),     # 36 % 8 != 0 -> fallback
+        "norm": jnp.zeros((64,), jnp.float32),        # full-rank Adam route
+    }
+
+    def grads_for(t):
+        r = np.random.default_rng(100 + t)
+        return {k: jnp.asarray(r.standard_normal(v.shape), jnp.float32)
+                for k, v in params.items()}
+
+    # ---- 1. bit-identical updates: fused and unfused, every leaf shape ----
+    for fused, kw in [("off", {}), ("on", {}), ("fft", {}),
+                      ("off", {"error_feedback": False}),
+                      ("off", {"ef_dtype": "fp32"}),
+                      ("off", {"update_interval": 2})]:
+        ref = get_optimizer("dct_adamw", lr=0.01, rank=8, fused=fused, **kw)
+        zo = get_optimizer("dct_adamw", lr=0.01, rank=8, fused=fused,
+                           zero=zcfg, **kw)
+        sr, sz = ref.init(params), zo.init(params)
+        with set_mesh(mesh):
+            for t in range(3):
+                g = grads_for(t)
+                ur, sr = jax.jit(ref.update)(g, sr, params)
+                uz, sz = jax.jit(zo.update)(g, sz, params)
+        for k in params:
+            np.testing.assert_array_equal(
+                np.asarray(ur[k]), np.asarray(uz[k]),
+                err_msg=f"fused={fused} kw={kw} leaf={k}")
+
+    # fira residual is excluded from sharding (its psum'd phi scaling
+    # would feed the update arithmetic and break bit-exactness); its
+    # leaves must fall back to the replicated path — parity exact
+    ref = get_optimizer("fira", lr=0.01, rank=8, projector="dct")
+    zo = get_optimizer("fira", lr=0.01, rank=8, projector="dct", zero=zcfg)
+    sr, sz = ref.init(params), zo.init(params)
+    with set_mesh(mesh):
+        for t in range(2):
+            g = grads_for(t)
+            ur, sr = jax.jit(ref.update)(g, sr, params)
+            uz, sz = jax.jit(zo.update)(g, sz, params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(ur[k]), np.asarray(uz[k]),
+                                      err_msg=f"fira leaf={k}")
+    print("zero update parity OK")
+
+    # ---- 2. telemetry parity (stats psum'd inside the shard_map) ----------
+    ref = get_optimizer("dct_adamw", lr=0.01, rank=8)
+    zo = get_optimizer("dct_adamw", lr=0.01, rank=8, zero=zcfg)
+    g = grads_for(0)
+
+    def run(opt, st):
+        with collect() as col:
+            u, st = opt.update(g, st, params)
+        return u, st, col.tree()
+
+    with set_mesh(mesh):
+        _, _, tel_r = jax.jit(lambda s: run(ref, s))(ref.init(params))
+        _, _, tel_z = jax.jit(lambda s: run(zo, s))(zo.init(params))
+    assert set(tel_r) == set(tel_z) and tel_z, sorted(tel_z)
+    for path in tel_r:
+        for f in tel_r[path]._fields:
+            np.testing.assert_allclose(
+                np.asarray(getattr(tel_z[path], f)),
+                np.asarray(getattr(tel_r[path], f)), atol=1e-5,
+                err_msg=f"telemetry {path}.{f}")
+    print("zero telemetry parity OK")
+
+    # ---- 3. placement: ZeRO specs cut per-device state bytes --------------
+    zo = get_optimizer("dct_adamw", lr=0.01, rank=8, zero=zcfg)
+    with set_mesh(mesh):
+        st = zo.init(params)
+        p_specs = sh.params_specs(params, mesh)
+        o_specs = sh.opt_state_specs(st, params, p_specs, zero=zcfg,
+                                     mesh=mesh)
+        st_sh = jax.device_put(st, sh.named_shardings(o_specs, mesh))
+    pl = st_sh.leaves[0]["lowrank"]["w"]
+    assert pl.m.sharding.spec == P(None, ("pod", "data"), None), pl.m.sharding
+    assert pl.ef.q.sharding.spec == P(None, ("pod", "data"), None)
+    assert pl.proj.sharding.spec == P()      # indices replicate
+
+    def dev_bytes(tree, dev):
+        return sum(s.data.nbytes for x in jax.tree.leaves(tree)
+                   for s in x.addressable_shards if s.device == dev)
+
+    d0 = jax.devices()[0]
+    b_rep, b_sh = dev_bytes(st.leaves, d0), dev_bytes(st_sh.leaves, d0)
+    assert b_sh < b_rep / 4, (b_sh, b_rep)   # idx/ineligible leaves replicate
+    print(f"zero placement OK ({b_rep} -> {b_sh} bytes/device)")
+
+    # ---- 4. sharded save -> restore on a DIFFERENT topology ---------------
+    with set_mesh(mesh):
+        for t in range(2):
+            _, st_sh = jax.jit(zo.update, donate_argnums=1)(
+                grads_for(t), st_sh, params)
+        # replicated twin advanced identically (parity reference)
+        st_rep = zo.init(params)
+        for t in range(2):
+            _, st_rep = jax.jit(zo.update)(grads_for(t), st_rep, params)
+
+    cm = CheckpointManager(tempfile.mkdtemp(prefix="zck_"), keep=2)
+    cm.save(2, st_sh)                        # gathered, mesh-agnostic
+    mesh2 = make_mesh((4, 2), ("pod", "data"))
+    with set_mesh(mesh2):
+        target = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st_sh)
+        o_specs2 = sh.opt_state_specs(target, params,
+                                      sh.params_specs(params, mesh2),
+                                      zero=zcfg, mesh=mesh2)
+        st2 = cm.restore(2, target, shardings=sh.named_shardings(o_specs2,
+                                                                 mesh2))
+        assert (st2.leaves[0]["lowrank"]["w"].m.sharding.spec
+                == P(None, ("pod", "data"), None))
+        # one more step on the new topology must still match replicated
+        u2, _ = jax.jit(zo.update)(grads_for(2), st2, params)
+        ur, _ = jax.jit(zo.update)(grads_for(2), st_rep, params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(u2[k]), np.asarray(ur[k]),
+                                      err_msg=f"post-reshard leaf={k}")
+    print("zero reshard restore OK")
+""")
+
+
+def test_zero_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "zero update parity OK" in proc.stdout
+    assert "zero telemetry parity OK" in proc.stdout
+    assert "zero placement OK" in proc.stdout
+    assert "zero reshard restore OK" in proc.stdout
+
+
+def test_zero_shardable_gate():
+    """Only index-based projectors shard, and the fira residual is
+    excluded (its phi scaling would feed psum'd norms into the update)."""
+    from repro.optim.projected_adam import ProjectedAdamRule
+
+    assert ProjectedAdamRule(projector="dct").zero_shardable
+    assert ProjectedAdamRule(projector="randperm",
+                             needs_shared_basis=False).zero_shardable
+    assert not ProjectedAdamRule(projector="svd",
+                                 needs_shared_basis=False).zero_shardable
+    assert not ProjectedAdamRule(projector="power",
+                                 needs_shared_basis=False).zero_shardable
+    assert not ProjectedAdamRule(projector="dct",
+                                 residual="fira").zero_shardable
+
+
+def test_zero_config_validation():
+    from repro.parallel.zero import ZERO_OFF, ZeroConfig, parse_zero
+
+    assert not ZERO_OFF.active
+    assert parse_zero("1").active
+    assert ZeroConfig(mode="1", axes=["data"]).axes == ("data",)
+    try:
+        ZeroConfig(mode="2")
+    except ValueError as e:
+        assert "zero mode" in str(e)
+    else:
+        raise AssertionError("mode '2' accepted")
+
+
+def test_zero_inactive_without_mesh():
+    """No mesh active -> resolve() is None and the optimizer runs the
+    plain replicated path (same numbers as a zero=None build)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.optim.api import get_optimizer
+    from repro.parallel.zero import ZeroConfig, resolve
+
+    assert resolve(ZeroConfig(mode="1")) is None
+    params = {"w": jnp.zeros((24, 16), jnp.float32)}
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((24, 16)),
+                          jnp.float32)}
+    a = get_optimizer("dct_adamw", lr=0.01, rank=4)
+    b = get_optimizer("dct_adamw", lr=0.01, rank=4,
+                      zero=ZeroConfig(mode="1"))
+    ua, _ = jax.jit(a.update)(g, a.init(params), params)
+    ub, _ = jax.jit(b.update)(g, b.init(params), params)
+    np.testing.assert_array_equal(np.asarray(ua["w"]), np.asarray(ub["w"]))
