@@ -224,6 +224,7 @@ def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
         "steps_timed": steps,
         "backend": jax.default_backend(),
         "modes": {},
+        "dispatch_gate": basis_dispatch_gate(),
     }
     for label, mode in (("reference", "off"), ("fused", fused_mode)):
         rule = dataclasses.replace(base, fused=mode)
@@ -244,6 +245,39 @@ def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
             json.dump(result, f, indent=2)
         print(f"[optimizer_step] wrote {out_path}")
     return result
+
+
+def basis_dispatch_gate(kinds=("dct", "dst", "hadamard"),
+                        shape=(2, 128, 128), rank: int = 16) -> dict:
+    """Hard-fail if any predefined-basis kind stops reaching the fused
+    kernel path through the chain API.
+
+    The projection kernel is parameterized by the basis matrix (DESIGN.md
+    §10), so every registered backend must dispatch to the same
+    ``pallas_call`` under fused mode "on". Compiles one tiny step per kind
+    under the spy; a zero kernel counter raises (the CI bench job runs
+    this via ``bench_projected_step``). Returns the per-kind counters for
+    the JSON record.
+    """
+    from repro.optim.projected_adam import ProjectedAdamRule
+
+    counts = {}
+    for kind in kinds:
+        rule = ProjectedAdamRule(rank=rank, projector=kind, residual="ef",
+                                 ef_dtype="q8", fused="on",
+                                 needs_shared_basis=True)
+        _, _, _, spy, _ = compile_opt_step(rule, shape)
+        try:
+            spy.check("on")
+        except RuntimeError as e:
+            raise RuntimeError(
+                f"basis kind {kind!r} no longer reaches the fused kernel "
+                f"path: {e}") from e
+        counts[kind] = dict(spy.counts)
+        print(f"[optimizer_step] dispatch gate {kind:10s} "
+              f"kernel={spy.counts['kernel']} "
+              f"select_and_project={spy.counts['select_and_project']}")
+    return counts
 
 
 def fmt_row(name: str, r: dict, extra: str = "") -> str:

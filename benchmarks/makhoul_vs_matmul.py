@@ -1,19 +1,28 @@
-"""Paper Appendix C/D Tables 4-5: Makhoul FFT-DCT vs matmul timing.
+"""Paper Appendix C/D Tables 4-5: fast transforms vs matmul timing.
 
-On this container the backend is CPU, where the FFT path is the right
+On this container the backend is CPU, where the fast paths are the right
 algorithm (the paper's GPU setting) — so the paper's qualitative claim
 (Makhoul wins for large n, especially R < C) is reproducible here, while
 DESIGN.md §2 explains why the TPU production path inverts the choice
 (MXU matmul + fused Pallas kernel).
+
+``run_transforms`` extends the comparison to every registered basis
+backend (DESIGN.md §10): each kind's ``apply_fast`` against its own
+matmul path, at the production width — the numbers behind
+``BENCH_basis_transforms.json``. The committed record asserts the
+Hadamard FHT butterfly beats its matmul at n=4096 (it is matmul-free and
+twiddle-free, so it should win by more than Makhoul does).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transforms as tr
 from repro.core.dct import dct2_matrix, makhoul_dct2
 
 
@@ -46,5 +55,50 @@ def run(sizes=((1024, 1024), (4096, 1024), (1024, 4096))) -> list[dict]:
     return rows
 
 
+def run_transforms(rows: int = 512, n: int = 4096,
+                   out_path: str | None = "BENCH_basis_transforms.json"
+                   ) -> dict:
+    """Per-backend fast-vs-matmul timing at the production width.
+
+    For each registered basis backend: time ``x @ Q`` (the TPU/MXU path)
+    against ``backend.apply_fast(x)`` (Makhoul FFT for dct, FHT butterfly
+    for hadamard; backends without a fast path are timed matmul-only).
+    Asserts the committed acceptance claim: hadamard's FHT beats its own
+    matmul path at the production n.
+    """
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((rows, n)), jnp.float32)
+    result = {"bench": "basis_transforms", "rows": rows, "n": n,
+              "backend": jax.default_backend(), "kinds": {}}
+    for kind in tr.backend_kinds():
+        be = tr.get_backend(kind)
+        q = tr.shared_basis(kind, n)           # build cost outside timing
+        mm = jax.jit(lambda x, q: x @ q)
+        t_mm = _time(mm, x, q)
+        row = {"matmul_s": t_mm, "has_fast": be.has_fast}
+        if be.has_fast:
+            fast = jax.jit(be.apply_fast)
+            t_fast = _time(fast, x)
+            row["fast_s"] = t_fast
+            row["speedup_fast_vs_matmul"] = t_mm / t_fast
+            print(f"[basis_transforms] {kind:10s} matmul={t_mm * 1e3:8.3f}ms"
+                  f"  fast={t_fast * 1e3:8.3f}ms  "
+                  f"{t_mm / t_fast:6.2f}x")
+        else:
+            print(f"[basis_transforms] {kind:10s} matmul={t_mm * 1e3:8.3f}ms"
+                  f"  (no fast path)")
+        result["kinds"][kind] = row
+    had = result["kinds"]["hadamard"]
+    assert had["fast_s"] < had["matmul_s"], \
+        f"hadamard FHT ({had['fast_s']:.4f}s) must beat its matmul " \
+        f"({had['matmul_s']:.4f}s) at n={n}"
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[basis_transforms] wrote {out_path}")
+    return result
+
+
 if __name__ == "__main__":
     run()
+    run_transforms()

@@ -7,16 +7,23 @@ factorization error each method commits at every step:
     Dion :  B ~ P_t Q_t^T from warm-started power iteration + QR
     Trion:  B ~ b_t Q_t^T from DCT dynamic column selection
 Claim: the DCT selection yields lower (and over time decreasing) error.
+
+``run_basis_errors`` extends the methodology across the basis registry
+(DESIGN.md §10): per backend kind, the top-r column-selection
+reconstruction error on the same gradient stream, normalized by the
+rank-r SVD optimum — how much each predefined basis gives up against the
+(per-matrix, expensive) optimal subspace, and whether each stays inside
+its §4.1 contractive bound.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import transforms as tr
 from repro.core.dct import dct2_matrix
 from repro.core.selection import back_project, dynamic_column_selection
 from repro.data.synthetic import SyntheticLM
-from repro.models import transformer as T
 from repro.train.steps import loss_fn
 
 from .common import tiny_llama
@@ -64,49 +71,25 @@ def run(steps: int = 30, rank: int = 16, mu: float = 0.95) -> dict:
     training trajectory (params update each step — a frozen model's
     momentum degenerates to one persistent direction, which flatters
     power iteration and starves a fixed basis)."""
-    from repro.optim.api import get_optimizer
-    from repro.train.steps import init_state, make_train_step
-
-    cfg = tiny_llama()
-    opt = get_optimizer("adamw", lr=3e-3)
-    state = init_state(cfg, opt, jax.random.PRNGKey(0))
-    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
-    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
-    grad = jax.jit(jax.grad(lambda p, b: loss_fn(p, b, cfg)[0]))
-
-    # first block's attention + MLP matrices
-    seg = lambda g: g["segments"][0]["p0"]
-    names = ["attn.wq", "attn.wo", "mlp.wg", "mlp.wd"]
-    getters = {
-        "attn.wq": lambda s: s["attn"]["wq"]["kernel"][0],
-        "attn.wo": lambda s: s["attn"]["wo"]["kernel"][0],
-        "mlp.wg": lambda s: s["mlp"]["wg"]["kernel"][0],
-        "mlp.wd": lambda s: s["mlp"]["wd"]["kernel"][0],
-    }
-
     dct = {}
     dstate: dict = {}
     tstate: dict = {}
-    errs = {n: {"dion": [], "trion": []} for n in names}
-    for t in range(steps):
-        batch = ds.batch(jnp.int32(t))
-        g_tree = grad(state.params, batch)
-        state, _ = step_fn(state, batch)      # evolve the trajectory
-        for n in names:
-            g = getters[n](seg(g_tree)).astype(jnp.float32)
-            if g.shape[0] < g.shape[1]:
-                g = g.T
+    errs: dict = {}
+    for grads in _grad_stream(steps):
+        for n, g in grads.items():
             m, nn = g.shape
             r = min(rank, nn)
             if n not in dstate:
                 dstate[n] = {"m": jnp.zeros_like(g), "q": jnp.eye(nn, r)}
                 tstate[n] = {"m": jnp.zeros_like(g)}
                 dct[n] = dct2_matrix(nn, jnp.float32)
+                errs[n] = {"dion": [], "trion": []}
             dstate[n], ed = _step_dion(dstate[n], g, mu, r)
             tstate[n], et, bound = _step_trion(tstate[n], g, mu, r, dct[n])
             errs[n]["dion"].append(ed)
             errs[n]["trion"].append(et)
             errs[n].setdefault("bound", []).append(bound)
+    names = list(errs)
 
     print("(ordering vs Dion is data-dependent — the paper's Fig 1 uses "
           "C4 gradients whose eigenbasis is DCT-like per §4.2; synthetic "
@@ -126,5 +109,88 @@ def run(steps: int = 30, rank: int = 16, mu: float = 0.95) -> dict:
     return errs
 
 
+def _grad_stream(steps: int):
+    """The App. F gradient stream: first-block linear-layer gradients from
+    an evolving tiny-Llama training trajectory (a frozen model's momentum
+    degenerates — see ``run``). Yields ``{name: (m, n) fp32}`` per step."""
+    from repro.optim.api import get_optimizer
+    from repro.train.steps import init_state, make_train_step
+
+    cfg = tiny_llama()
+    opt = get_optimizer("adamw", lr=3e-3)
+    state = init_state(cfg, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    grad = jax.jit(jax.grad(lambda p, b: loss_fn(p, b, cfg)[0]))
+
+    seg = lambda g: g["segments"][0]["p0"]
+    getters = {
+        "attn.wq": lambda s: s["attn"]["wq"]["kernel"][0],
+        "attn.wo": lambda s: s["attn"]["wo"]["kernel"][0],
+        "mlp.wg": lambda s: s["mlp"]["wg"]["kernel"][0],
+        "mlp.wd": lambda s: s["mlp"]["wd"]["kernel"][0],
+    }
+    for t in range(steps):
+        batch = ds.batch(jnp.int32(t))
+        g_tree = grad(state.params, batch)
+        state, _ = step_fn(state, batch)
+        out = {}
+        for n, get in getters.items():
+            g = get(seg(g_tree)).astype(jnp.float32)
+            if g.shape[0] < g.shape[1]:
+                g = g.T
+            out[n] = g
+        yield out
+
+
+def run_basis_errors(steps: int = 10, rank: int = 16) -> dict:
+    """Per-basis top-r selection error vs the rank-r SVD optimum.
+
+    For every registered backend: ``err = ||G - G Q_r Q_r^T||_F`` with
+    ``Q_r`` the top-r energy-selected columns, reported as the ratio to
+    ``err_svd = sqrt(sum_{i>r} sigma_i^2)`` (the Eckart–Young floor).
+    Asserts the ratio >= 1 (SVD is optimal) and that every basis stays
+    inside the §4.1 contractive bound ``sqrt(1 - r/n) ||G||_F``.
+    """
+    kinds = tr.backend_kinds()
+    sums = {k: 0.0 for k in kinds}
+    svd_sum = 0.0
+    count = 0
+    bound_ok = {k: True for k in kinds}
+    for grads in _grad_stream(steps):
+        for name, g in grads.items():
+            n = g.shape[1]
+            r = min(rank, n)
+            total = float(jnp.linalg.norm(g))
+            s = jnp.linalg.svd(g, compute_uv=False)
+            err_svd = float(jnp.sqrt(jnp.maximum(
+                jnp.sum(s * s) - jnp.sum(s[:r] * s[:r]), 0.0)))
+            svd_sum += err_svd
+            bound = (1.0 - r / n) ** 0.5 * total
+            for kind in kinds:
+                q = tr.shared_basis(kind, n)
+                sm = g @ q
+                idx, low = dynamic_column_selection(sm, r)
+                err = float(jnp.linalg.norm(g - back_project(low, q, idx)))
+                sums[kind] += err
+                if err > bound * 1.001:
+                    bound_ok[kind] = False
+            count += 1
+    result = {"bench": "basis_errors", "rank": rank, "steps": steps,
+              "svd_err_mean": svd_sum / count, "kinds": {}}
+    for kind in kinds:
+        ratio = sums[kind] / max(svd_sum, 1e-30)
+        result["kinds"][kind] = {"err_mean": sums[kind] / count,
+                                 "ratio_vs_svd": ratio,
+                                 "contractive_bound_ok": bound_ok[kind]}
+        print(f"[basis_errors] {kind:10s} err={sums[kind] / count:9.4f} "
+              f"vs svd x{ratio:6.3f} "
+              f"bound={'PASS' if bound_ok[kind] else 'FAIL'}")
+        assert ratio >= 1.0 - 1e-3, (kind, ratio)   # Eckart–Young floor
+        assert bound_ok[kind], f"{kind} violated the §4.1 bound"
+    return result
+
+
 if __name__ == "__main__":
     run()
+    run_basis_errors()

@@ -14,6 +14,10 @@ Sections:
   telemetry_overhead   DESIGN.md §8      stats-on vs stats-off fused step
                                          (≤3% gate) ->
                                          BENCH_telemetry_overhead.json
+  basis_transforms     DESIGN.md §10     fast-vs-matmul per basis backend
+                                         -> BENCH_basis_transforms.json
+  basis_errors         DESIGN.md §10     per-basis selection error vs the
+                                         rank-r SVD optimum
 """
 from __future__ import annotations
 
@@ -62,6 +66,17 @@ def main(argv=None) -> int:
             threshold=0.15 if args.fast else 0.03,
             out_path=("BENCH_telemetry_overhead_fast.json" if args.fast
                       else "BENCH_telemetry_overhead.json")),
+        # per-backend fast-vs-matmul (fast mode: scratch path + reduced
+        # size so the committed production-shape record never gets
+        # clobbered; n stays >= 2048 because the FHT-beats-matmul assert
+        # needs a decisive margin on a noisy CI box)
+        "basis_transforms": lambda: makhoul_vs_matmul.run_transforms(
+            rows=128 if args.fast else 512,
+            n=2048 if args.fast else 4096,
+            out_path=("BENCH_basis_transforms_fast.json" if args.fast
+                      else "BENCH_basis_transforms.json")),
+        "basis_errors": lambda: projection_errors.run_basis_errors(
+            steps=4 if args.fast else 10),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     failures = 0

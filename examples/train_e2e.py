@@ -27,11 +27,16 @@ if __name__ == "__main__":
                     help="stream subspace telemetry (switches the smoke "
                          "run to dct_adamw so the stats have a subject)")
     ap.add_argument("--telemetry-path", default=None)
+    ap.add_argument("--basis", default=None,
+                    choices=["dct", "dst", "hadamard", "randortho"],
+                    help="predefined-basis backend (switches the run to "
+                         "dct_adamw, the preset the basis plugs into)")
     args = ap.parse_args()
     steps = 20 if args.smoke else args.steps
-    # telemetry runs exercise the paper's optimizer (projected-Adam family
-    # emits SubspaceStats); the default run keeps the historic trion config
-    optimizer = "dct_adamw" if args.telemetry != "off" else "trion"
+    # telemetry/basis runs exercise the paper's optimizer (projected-Adam
+    # family); the default run keeps the historic trion config
+    optimizer = ("dct_adamw" if args.telemetry != "off" or args.basis
+                 else "trion")
     argv = ["--arch", "llama-30m", "--optimizer", optimizer, "--rank", "64",
             "--steps", str(steps), "--ckpt-dir", args.ckpt_dir,
             "--ckpt-every", "50" if not args.smoke else "10",
@@ -40,6 +45,8 @@ if __name__ == "__main__":
         argv += ["--telemetry", args.telemetry, "--telemetry-every", "5"]
         if args.telemetry_path:
             argv += ["--telemetry-path", args.telemetry_path]
+    if args.basis:
+        argv += ["--basis", args.basis]
     if args.smoke:
         # llama-30m is already the CPU-sized paper model; just shrink the run
         argv += ["--seq-len", "64", "--batch", "4"]

@@ -1,6 +1,7 @@
 """Fused execution layer for the projected-Adam hot path (DESIGN.md §3).
 
-The reference ``ProjectedAdamRule`` path performs, per DCT leaf and step:
+The reference ``ProjectedAdamRule`` path performs, per predefined-basis
+(DCT/DST/Hadamard/random-orthogonal) leaf and step:
 
     S = G @ Q          (refresh: ranking statistic, O(m n^2))
     g_low = G @ Q_r    (projection, O(m n r))       <- duplicated pass over G
@@ -19,10 +20,13 @@ Three concrete modes (``resolve`` maps a rule's ``fused`` field to one):
   ``"on"``   — Pallas kernel path (``kernels.ops``): TPU production;
                interpret mode off-TPU, which is how the parity tests run it.
   ``"fft"``  — pure-jnp fused dataflow with the forward transform computed by
-               Makhoul's N-point FFT (paper Appendix D): the host/GPU fast
-               path. ``S`` costs O(m n log n) instead of the O(m n^2) matmul;
-               back-projection stays a (shared-gather) matmul, which at
-               r << n is cheaper than an inverse transform.
+               the basis backend's fast path (``BasisBackend.apply_fast``:
+               Makhoul's N-point FFT for DCT, the FHT butterfly for
+               Hadamard, a matmul for backends without one): the host/GPU
+               fast path. ``S`` costs O(m n log n) instead of the
+               O(m n^2) matmul; back-projection stays a (shared-gather)
+               matmul, which at r << n is cheaper than an inverse
+               transform.
   ``"off"``  — the seed jnp reference path, bit-identical to the seed repo.
 
 ``"auto"`` resolves to the kernel path on TPU and degrades to the reference
@@ -81,14 +85,18 @@ def resolve(mode: str) -> str:
 # ---------------------------------------------------------------------------
 def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
                        norm: str = "l2", mode: str,
-                       return_norms: bool = False, psum_axes=None):
+                       return_norms: bool = False, psum_axes=None,
+                       backend=None):
     """Dynamic column selection + low-rank extraction in one ``G``-sized pass.
 
     Returns ``(idx (..., r), g_low (..., m, r))``. The kernel path fuses the
-    column-norm accumulation into the ``S = G @ Q`` matmul; the fft path
-    computes ``S`` row-wise by Makhoul FFT. Either way ``g_low`` is sliced
-    out of ``S`` (``S[:, idx] == G @ Q[:, idx]`` exactly), so the reference
-    path's second projection matmul never runs.
+    column-norm accumulation into the ``S = G @ Q`` matmul — the kernel is
+    parameterized by the basis matrix ``q``, so every predefined-basis
+    backend reaches it; the fft path computes ``S`` row-wise by the
+    backend's fast transform (``backend.apply_fast``; default: Makhoul
+    FFT, the DCT backend's). Either way ``g_low`` is sliced out of ``S``
+    (``S[:, idx] == G @ Q[:, idx]`` exactly), so the reference path's
+    second projection matmul never runs.
 
     ``return_norms=True`` appends the *squared-l2* column norms of ``S``
     (..., n) — the §4.1 energy statistic the telemetry layer feeds on. The
@@ -108,7 +116,7 @@ def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
         idx = select_top_r(rank_norms, r)
         g_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
         return (idx, g_low, norms_sq) if return_norms else (idx, g_low)
-    s = makhoul_dct2(gf)
+    s = backend.apply_fast(gf, q) if backend is not None else makhoul_dct2(gf)
     if not return_norms and psum_axes is None:
         return dynamic_column_selection(s, r, ord=norm)
     norms_sq = allsum(column_norms(s, "l2"), psum_axes)

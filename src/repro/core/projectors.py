@@ -7,13 +7,20 @@ plug point: every projector maps a gradient matrix ``G (..., m, n)`` (already
 oriented so the *projected* dimension is the last one, ``n <= m``) to a rank-r
 right basis, and exposes project / backproject.
 
-State layout per kind (broadcast over leading stacked-layer axes):
-  dct      -> int32 indices (..., r) into the shared DCT basis (paper: "only
-              r integers per layer")
-  svd      -> Q (..., n, r) top right-singular-vector basis
-  power    -> Q (..., n, r) block-power-iteration basis (QR-orthonormalized)
-  random   -> Q (..., n, r) random semi-orthogonal (FRUGAL baseline)
-  randperm -> int32 indices (..., r) random column subset (FRUGAL baseline)
+Two families:
+
+* **Predefined-basis kinds** — any :class:`~repro.core.transforms.BasisBackend`
+  registered in the transform registry (``dct`` / ``dst`` / ``hadamard`` /
+  ``randortho``): state is int32 indices ``(..., r)`` into the model-wide
+  shared basis (paper: "only r integers per layer"), selection ranks the
+  backend's column-energy statistic.
+* **Dense kinds** — per-matrix ``(..., n, r)`` bases:
+  ``svd`` (top right-singular vectors), ``power`` (block power iteration,
+  QR-orthonormalized), ``random`` (per-refresh random semi-orthogonal,
+  FRUGAL baseline); plus ``randperm`` — int32 random column subset
+  (identity basis, FRUGAL baseline).
+
+All state layouts broadcast over leading stacked-layer axes.
 """
 from __future__ import annotations
 
@@ -23,39 +30,76 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .dct import dct2_matrix
 from .selection import (
     allsum,
     back_project,
-    column_norms,
     gather_columns,
     select_top_r,
 )
+from .transforms import backend_kinds, get_backend, is_backend, shared_basis
 
-PROJECTOR_KINDS = ("dct", "svd", "power", "random", "randperm")
+#: projector kinds that are NOT predefined-basis backends
+DENSE_KINDS = ("svd", "power", "random", "randperm")
+
+
+def projector_kinds() -> tuple[str, ...]:
+    """Every valid ``Projector.kind``: the registered basis backends plus
+    the dense per-matrix kinds. Live view of the registry."""
+    return backend_kinds() + DENSE_KINDS
+
+
+# import-time snapshot, kept for back-compat (validation goes through
+# ``projector_kinds()`` so late-registered backends are honoured)
+PROJECTOR_KINDS = projector_kinds()
+
+
+def _unknown_kind(kind) -> ValueError:
+    """The one unknown-kind error, sourced from the registry — raised
+    eagerly at construction and (defensively) on every dispatch path, so
+    the message never degrades to a bare ``ValueError(kind)``."""
+    return ValueError(f"unknown projector kind {kind!r}; allowed: "
+                      f"{projector_kinds()}")
 
 
 @dataclasses.dataclass(frozen=True)
 class Projector:
-    """Rank-r right-projector family. ``shared_q`` holds the DCT basis when
-    kind == 'dct' (one per device for the whole model — the paper's memory
-    win); other kinds keep a per-matrix basis in their state."""
+    """Rank-r right-projector family. ``shared_q`` holds the predefined
+    orthogonal basis for backend kinds (one per device for the whole model
+    — the paper's memory win); dense kinds keep a per-matrix basis in
+    their state."""
 
     kind: str
     r: int
-    norm: str = "l2"  # ranking norm for dct
+    norm: str = "l2"  # ranking norm for predefined-basis kinds
+
+    def __post_init__(self):
+        if self.kind not in projector_kinds():
+            raise _unknown_kind(self.kind)
+
+    @property
+    def backend(self):
+        """The registered :class:`BasisBackend`, or None for dense kinds."""
+        return get_backend(self.kind) if is_backend(self.kind) else None
+
+    def _shared_q(self, shared_q: jax.Array | None, n: int,
+                  dtype=jnp.float32) -> jax.Array:
+        """The shared basis: the caller's (from ``ctx.basis``) when given,
+        else built in-graph by the backend."""
+        if shared_q is not None:
+            return shared_q
+        return get_backend(self.kind).matrix(n, dtype)
 
     def init(self, shape: tuple[int, ...], key: jax.Array | None = None) -> Any:
         """Initial state for a (stacked) matrix of ``shape`` (..., m, n)."""
         *batch, m, n = shape
         r = min(self.r, n)
-        if self.kind in ("dct", "randperm"):
+        if is_backend(self.kind) or self.kind == "randperm":
             idx = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32), (*batch, r))
             return idx
         if self.kind in ("svd", "power", "random"):
             eye = jnp.eye(n, r, dtype=jnp.float32)
             return jnp.broadcast_to(eye, (*batch, n, r))
-        raise ValueError(f"unknown projector kind {self.kind!r}")
+        raise _unknown_kind(self.kind)
 
     # -- basis refresh ------------------------------------------------------
     def update(self, g: jax.Array, state: Any, shared_q: jax.Array | None = None,
@@ -63,20 +107,21 @@ class Projector:
         """Recompute the basis from the current gradient/momentum ``g``.
 
         ``psum_axes``: mesh axes the rows of ``g`` are sharded over (ZeRO-1
-        shard_map, DESIGN.md §9). Row reductions — the dct column energies,
-        the power iteration's ``G^T (G Q)`` contraction — are completed by
-        a psum so every shard derives the same basis. ``svd`` is not
-        row-decomposable and rejects sharded input; key-based kinds
+        shard_map, DESIGN.md §9). Row reductions — the backend column
+        energies, the power iteration's ``G^T (G Q)`` contraction — are
+        completed by a psum so every shard derives the same basis. ``svd``
+        is not row-decomposable and rejects sharded input; key-based kinds
         (random/randperm) draw from the replicated per-leaf key and need no
         communication.
         """
         n = g.shape[-1]
         r = min(self.r, n)
         gf = g.astype(jnp.float32)
-        if self.kind == "dct":
-            s = gf @ shared_q.astype(jnp.float32)
-            return select_top_r(allsum(column_norms(s, self.norm), psum_axes),
-                                r)
+        backend = self.backend
+        if backend is not None:
+            stat = backend.energy_stat(gf, self._shared_q(shared_q, n),
+                                       norm=self.norm, psum_axes=psum_axes)
+            return select_top_r(stat, r)
         if self.kind == "svd":
             if psum_axes:
                 raise ValueError("svd projector refresh needs the full "
@@ -98,7 +143,7 @@ class Projector:
             perm = jax.random.permutation(key, n)[:r]
             return jnp.broadcast_to(jnp.sort(perm).astype(jnp.int32),
                                     (*g.shape[:-2], r))
-        raise ValueError(self.kind)
+        raise _unknown_kind(self.kind)
 
     # -- application --------------------------------------------------------
     def project(self, g: jax.Array, state: Any,
@@ -107,10 +152,13 @@ class Projector:
         if self.kind == "randperm":
             # Q = I: projection is a pure column take (no matmul)
             return jnp.take_along_axis(g, state[..., None, :], axis=-1)
-        if self.kind == "dct":
-            qr = gather_columns(shared_q, state)          # (..., n, r)
+        if is_backend(self.kind):
+            q = self._shared_q(shared_q, g.shape[-1])
+            qr = gather_columns(q, state)                 # (..., n, r)
             return jnp.einsum("...mn,...nr->...mr", g, qr.astype(g.dtype))
-        return jnp.einsum("...mn,...nr->...mr", g, state.astype(g.dtype))
+        if self.kind in ("svd", "power", "random"):
+            return jnp.einsum("...mn,...nr->...mr", g, state.astype(g.dtype))
+        raise _unknown_kind(self.kind)
 
     def backproject(self, low: jax.Array, state: Any,
                     shared_q: jax.Array | None = None, n: int | None = None
@@ -126,33 +174,52 @@ class Projector:
             out = jnp.zeros((*low.shape[:-1], n), low.dtype)
             idx = jnp.broadcast_to(state[..., None, :], low.shape[:-1] + state.shape[-1:])
             return jnp.put_along_axis(out, idx, low, axis=-1, inplace=False)
-        if self.kind == "dct":
-            return back_project(low, shared_q.astype(low.dtype), state)
-        return jnp.einsum("...mr,...nr->...mn", low, state.astype(low.dtype))
+        if is_backend(self.kind):
+            if shared_q is None and n is None:
+                raise ValueError(
+                    f"{self.kind} backproject needs the full dimension `n` "
+                    f"(or a shared_q to infer it from)")
+            q = self._shared_q(shared_q, n)
+            return back_project(low, q.astype(low.dtype), state)
+        if self.kind in ("svd", "power", "random"):
+            return jnp.einsum("...mr,...nr->...mn", low, state.astype(low.dtype))
+        raise _unknown_kind(self.kind)
 
     def basis_matrix(self, state: Any, n: int,
                      shared_q: jax.Array | None = None) -> jax.Array:
         """Materialize Q_r (..., n, r) — for tests / rotation matmul flag."""
         if self.kind == "randperm":
             return jnp.swapaxes(jnp.eye(n, dtype=jnp.float32)[state], -1, -2)
-        if self.kind == "dct":
-            return gather_columns(shared_q, state)
-        return state
+        if is_backend(self.kind):
+            return gather_columns(self._shared_q(shared_q, n), state)
+        if self.kind in ("svd", "power", "random"):
+            return state
+        raise _unknown_kind(self.kind)
+
+    @property
+    def index_based(self) -> bool:
+        """State is an index set into one orthogonal matrix (every backend
+        kind, plus randperm's identity-basis column subset)."""
+        return is_backend(self.kind) or self.kind == "randperm"
 
     @property
     def needs_shared_basis(self) -> bool:
-        return self.kind == "dct"
+        return is_backend(self.kind)
 
     @property
     def needs_key(self) -> bool:
-        return self.kind in ("random", "randperm")
+        if self.kind in ("random", "randperm"):
+            return True
+        backend = self.backend
+        return backend is not None and backend.needs_key
 
 
 def shared_basis_for(kind: str, n: int, dtype=jnp.float32) -> jax.Array | None:
-    """The model-wide shared basis: the DCT matrix for 'dct' (one per device
-    for the entire model — the paper's memory win), None otherwise."""
-    if kind == "dct":
-        return dct2_matrix(n, dtype)
+    """The model-wide shared basis for predefined-basis kinds (one per
+    device for the entire model — the paper's memory win), None for dense
+    kinds. Served from the process-wide :class:`BasisCache`."""
+    if is_backend(kind):
+        return shared_basis(kind, n, dtype)
     return None
 
 
@@ -161,13 +228,14 @@ def rotation_matrix(prev_state: Any, crt_state: Any, projector: Projector,
                     exact_matmul: bool = False) -> jax.Array:
     """Subspace rotation ``R = Q_prev^T Q_crt`` (paper Alg. 3 line 8).
 
-    For index-based projectors (dct/randperm) the columns come from one
-    orthogonal matrix, so ``R[a, b] = 1 iff prev_idx[a] == crt_idx[b]`` — a
-    0/1 partial permutation. We build it by index comparison in O(r^2) int
-    ops instead of the O(n r^2) matmul (exact algebraic equivalence; see
-    DESIGN.md §1). ``exact_matmul=True`` restores the paper-literal matmul.
+    For index-based projectors (any backend kind, randperm) the columns
+    come from one orthogonal matrix, so ``R[a, b] = 1 iff prev_idx[a] ==
+    crt_idx[b]`` — a 0/1 partial permutation. We build it by index
+    comparison in O(r^2) int ops instead of the O(n r^2) matmul (exact
+    algebraic equivalence; see DESIGN.md §1). ``exact_matmul=True``
+    restores the paper-literal matmul.
     """
-    if projector.kind in ("dct", "randperm") and not exact_matmul:
+    if projector.index_based and not exact_matmul:
         return (prev_state[..., :, None] == crt_state[..., None, :]).astype(jnp.float32)
     qp = projector.basis_matrix(prev_state, n, shared_q)
     qc = projector.basis_matrix(crt_state, n, shared_q)

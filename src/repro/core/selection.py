@@ -7,6 +7,12 @@ top-r column alignments is the *optimal* column subset of ``Q`` for Frobenius
 reconstruction error (paper §4.1) and yields a contractive compressor:
 ``||G - Q_r Q_r^T G||_F^2 <= (1 - r/n) ||G||_F^2``.
 
+Everything here is basis-agnostic: ``Q`` may be any orthogonal matrix
+(the §4.1 optimality and the contraction bound only use orthogonality),
+which is what lets the transform registry (core/transforms.py) swap
+DCT for DST / Walsh–Hadamard / random-orthogonal without touching the
+selection machinery.
+
 All functions broadcast over arbitrary leading (stacked-layer / expert) axes:
 the matrix lives in the last two dims.
 """

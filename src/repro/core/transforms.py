@@ -1,0 +1,368 @@
+"""Pluggable orthogonal-basis backends and the shared BasisCache.
+
+The paper's key insight is that *any* predefined orthogonal basis computed
+once at training start can replace per-layer SVD/QR — DCT is one instance,
+chosen for its Makhoul FFT fast path (DESIGN.md §2). Online Subspace
+Descent (Liang et al., 2024) shows convergence holds for arbitrary
+projection families, so the basis is a first-class pluggable component
+here: a :class:`BasisBackend` supplies the ``(n, n)`` orthogonal matrix,
+an optional fast transform, and the column-energy ranking statistic that
+the dynamic selection (core/selection.py) feeds on.
+
+Built-in backends (``register_backend`` adds more):
+
+  ``dct``       DCT-II — matmul on TPU, Makhoul N-point FFT fast path
+                elsewhere. The paper's choice; bit-compatible with the
+                historical hardcoded path.
+  ``dst``       DST-II — the sine sibling (same exact-int32 phase
+                reduction); matmul only.
+  ``hadamard``  Walsh–Hadamard (Sylvester order) — entries ±1/sqrt(n), no
+                twiddle factors; in-jit FHT butterfly fast path for
+                power-of-two n (matmul-free), block-diagonal Sylvester
+                decomposition + matmul fallback otherwise.
+  ``randortho`` Seeded random orthogonal (QR of a fixed-seed Gaussian,
+                sign-canonicalized) — the FRUGAL-style random-projection
+                ablation with *shared-basis* index state.
+
+All four keep per-leaf state of only ``r`` int32 indices (the paper's
+memory win) and have a row-decomposable energy statistic, so they are all
+ZeRO-1 eligible (DESIGN.md §9).
+
+The process-wide :class:`BasisCache` (``shared_basis``) memoizes the
+``(kind, n, dtype)`` -> matrix map, so adaptive-controller optimizer
+rebuilds (telemetry/adaptive.py) re-use the already-materialized n×n
+basis instead of recomputing it; ``basis_cache().hits`` makes the reuse
+observable (asserted in tests/test_basis_backends.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dct import _MAX_DCT_ORDER, dct2_matrix, makhoul_dct2
+from .selection import allsum, column_norms
+
+
+class BasisBackend:
+    """One predefined orthogonal basis family.
+
+    Subclasses define ``kind`` and ``matrix``; the default ``apply_fast``
+    and ``energy_stat`` fall back to the matmul against ``matrix`` —
+    override ``apply_fast`` (and set ``has_fast``) when an O(n log n)
+    transform exists.
+    """
+
+    kind: str = ""
+    #: a per-leaf PRNG key is needed at refresh (none of the built-ins:
+    #: even ``randortho`` is a *fixed* seeded basis, cached process-wide)
+    needs_key: bool = False
+    #: the energy statistic decomposes over row blocks (one (n,)-sized
+    #: psum completes it), so rules using this backend are ZeRO-1 eligible
+    zero_shardable: bool = True
+    #: ``apply_fast`` is genuinely cheaper than the matmul
+    has_fast: bool = False
+
+    def matrix(self, n: int, dtype=jnp.float32) -> jax.Array:
+        """The ``(n, n)`` orthogonal basis ``Q`` (``x @ Q`` = transform)."""
+        raise NotImplementedError
+
+    def apply_fast(self, x: jax.Array, q: jax.Array | None = None) -> jax.Array:
+        """Row-wise transform ``x @ Q`` — the host/GPU fast path when one
+        exists, else a matmul against ``q`` (or a freshly built matrix)."""
+        if q is None:
+            q = self.matrix(x.shape[-1], x.dtype)
+        return x @ q.astype(x.dtype)
+
+    def energy_stat(self, g: jax.Array, q: jax.Array, *, norm: str = "l2",
+                    psum_axes=None) -> jax.Array:
+        """Per-column ranking statistic of ``S = G @ Q`` (..., n).
+
+        The §4.1 energy statistic the dynamic selection ranks on. Row
+        reductions are completed by a psum over ``psum_axes`` so every
+        ZeRO shard derives the same statistic (DESIGN.md §9).
+        """
+        s = g @ q.astype(jnp.float32)
+        return allsum(column_norms(s, norm), psum_axes)
+
+
+# ---------------------------------------------------------------------------
+# DCT-II (the paper's basis) and DST-II
+# ---------------------------------------------------------------------------
+class DCTBackend(BasisBackend):
+    """Orthonormal DCT-II — the paper's basis (core/dct.py conventions)."""
+
+    kind = "dct"
+    has_fast = True
+
+    def matrix(self, n: int, dtype=jnp.float32) -> jax.Array:
+        return dct2_matrix(n, dtype)
+
+    def apply_fast(self, x: jax.Array, q: jax.Array | None = None) -> jax.Array:
+        """Makhoul's N-point FFT algorithm (paper Appendix D)."""
+        return makhoul_dct2(x)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dtype"))
+def dst2_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Orthonormal DST-II matrix: ``x @ dst2_matrix(n)`` is the row-wise
+    DST-II with the last basis vector scaled by 1/sqrt(2) (the sine
+    counterpart of ``dct2_matrix``; ``Q^T Q = I``).
+
+    Same precision trick as the DCT (core/dct.py): the integer phase
+    ``(2j+1)(k+1) mod 4n`` is reduced exactly in int32 before the float32
+    ``sin``, so entries stay ~1e-7 accurate at any supported order.
+    """
+    if n > _MAX_DCT_ORDER:
+        raise ValueError(f"DST order {n} exceeds int32-exact phase range")
+    j = jax.lax.iota(jnp.int32, n)[:, None]
+    k = jax.lax.iota(jnp.int32, n)[None, :]
+    phase = ((2 * j + 1) * (k + 1)) % (4 * n)      # exact in int32
+    ang = phase.astype(jnp.float32) * (np.pi / (2.0 * n))
+    q = np.sqrt(2.0 / n).astype(np.float32) * jnp.sin(ang)
+    q = q.at[:, n - 1].multiply(np.float32(1.0 / np.sqrt(2.0)))
+    return q.astype(dtype)
+
+
+class DSTBackend(BasisBackend):
+    """Orthonormal DST-II. No fast path wired (a Makhoul-style FFT route
+    exists but the matmul is the TPU path anyway — DESIGN.md §2)."""
+
+    kind = "dst"
+
+    def matrix(self, n: int, dtype=jnp.float32) -> jax.Array:
+        return dst2_matrix(n, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Walsh–Hadamard
+# ---------------------------------------------------------------------------
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """In-jit fast Walsh–Hadamard transform along the last axis
+    (Sylvester/natural order, *unnormalized*): ``fwht(x) == x @ H_n`` for
+    the ±1 Sylvester matrix ``H_n``. Power-of-two length only.
+
+    The butterfly is log2(n) reshape/stack passes — no matmul, no twiddle
+    factors; each pass is one add and one subtract over the full row.
+    """
+    n = x.shape[-1]
+    if not _is_pow2(n):
+        raise ValueError(f"fwht needs a power-of-two length, got {n}")
+    lead = x.shape[:-1]
+    h = 1
+    while h < n:
+        x = x.reshape(*lead, n // (2 * h), 2, h)
+        a, b = x[..., 0, :], x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2).reshape(*lead, n)
+        h *= 2
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dtype"))
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Orthonormal Walsh–Hadamard basis of order ``n``.
+
+    Power-of-two ``n``: the Sylvester matrix ``H[i, j] =
+    (-1)^popcount(i & j) / sqrt(n)`` (symmetric, orthogonal, entries
+    ±1/sqrt(n)). Other ``n``: Hadamard matrices don't exist at every
+    order, so the basis is the orthogonal block-diagonal of Sylvester
+    blocks following the binary decomposition of ``n`` (e.g. 40 = 32 + 8,
+    17 = 16 + 1) — still orthonormal, still matmul-free to *construct*,
+    applied by matmul (``apply_fast`` falls back).
+    """
+    if _is_pow2(n):
+        i = jax.lax.iota(jnp.int32, n)[:, None]
+        j = jax.lax.iota(jnp.int32, n)[None, :]
+        par = jax.lax.population_count(i & j) & 1
+        sign = 1.0 - 2.0 * par.astype(jnp.float32)
+        return (sign * np.float32(1.0 / np.sqrt(n))).astype(dtype)
+    q = jnp.zeros((n, n), jnp.float32)
+    off = 0
+    for bit in reversed(range(n.bit_length())):        # big blocks first
+        blk = 1 << bit
+        if n & blk:
+            q = jax.lax.dynamic_update_slice(
+                q, hadamard_matrix(blk, jnp.float32), (off, off))
+            off += blk
+    return q.astype(dtype)
+
+
+class HadamardBackend(BasisBackend):
+    """Walsh–Hadamard basis: ±1/sqrt(n) entries, no transcendentals, and a
+    matmul-free in-jit FHT butterfly for power-of-two n. When Hadamard
+    beats DCT (and when it doesn't): docs/transforms.md."""
+
+    kind = "hadamard"
+    has_fast = True
+
+    def matrix(self, n: int, dtype=jnp.float32) -> jax.Array:
+        return hadamard_matrix(n, dtype)
+
+    def apply_fast(self, x: jax.Array, q: jax.Array | None = None) -> jax.Array:
+        n = x.shape[-1]
+        if not _is_pow2(n):                            # odd-n matmul fallback
+            return super().apply_fast(x, q)
+        y = fwht(x.astype(jnp.float32)) * np.float32(1.0 / np.sqrt(n))
+        return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Seeded random orthogonal
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n", "dtype", "seed"))
+def random_orthogonal_matrix(n: int, dtype=jnp.float32,
+                             seed: int = 0) -> jax.Array:
+    """Deterministic random orthogonal basis: QR of a fixed-seed Gaussian,
+    sign-canonicalized (diag(R) >= 0) so the factorization — and therefore
+    every run and every rebuild — picks the same representative."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, n), jnp.float32)
+    q, r = jnp.linalg.qr(g)
+    d = jnp.diagonal(r)
+    q = q * jnp.where(d < 0, -1.0, 1.0)[None, :]
+    return q.astype(dtype)
+
+
+class RandOrthoBackend(BasisBackend):
+    """Seeded random-orthogonal basis (cached QR). Unlike the dense
+    ``random`` projector kind — which redraws a per-leaf ``(n, r)`` basis
+    from the step key at every refresh — this is one *shared* ``(n, n)``
+    orthogonal matrix with index-set selection, i.e. the fair
+    predefined-basis ablation against DCT/DST/Hadamard."""
+
+    kind = "randortho"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def matrix(self, n: int, dtype=jnp.float32) -> jax.Array:
+        return random_orthogonal_matrix(n, dtype, seed=self.seed)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, BasisBackend] = {}
+
+
+def register_backend(backend: BasisBackend, *, overwrite: bool = False) -> None:
+    """Add a backend to the registry (``Projector``/presets dispatch on
+    ``backend.kind``). Refuses silent replacement unless ``overwrite``."""
+    if not backend.kind:
+        raise ValueError("backend needs a non-empty .kind")
+    if backend.kind in _REGISTRY and not overwrite:
+        raise ValueError(f"basis backend {backend.kind!r} already "
+                         f"registered; pass overwrite=True to replace")
+    _REGISTRY[backend.kind] = backend
+
+
+def get_backend(kind: str) -> BasisBackend:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(f"unknown basis backend {kind!r}; registered: "
+                         f"{backend_kinds()}") from None
+
+
+def backend_kinds() -> tuple[str, ...]:
+    """Registered predefined-basis kinds (registration order)."""
+    return tuple(_REGISTRY)
+
+
+def is_backend(kind) -> bool:
+    return kind in _REGISTRY
+
+
+register_backend(DCTBackend())
+register_backend(DSTBackend())
+register_backend(HadamardBackend())
+register_backend(RandOrthoBackend())
+
+
+# ---------------------------------------------------------------------------
+# the shared basis cache
+# ---------------------------------------------------------------------------
+class BasisCache:
+    """Process-wide ``(kind, n, dtype) -> (n, n) basis`` memo.
+
+    One basis per distinct order serves the whole model (the paper's
+    memory win) *and the whole process lifetime*: ``as_optimizer``'s
+    stored-basis collection and ``shared_basis_for`` both route through
+    here, so an adaptive-controller rebuild (telemetry/adaptive.py —
+    ``optimizer.init`` on every adopted decision) hits the cache instead
+    of recomputing n×n matrices. ``hits``/``misses`` make that
+    observable.
+
+    Tracer-safe: a matrix built inside an outer jit trace is returned but
+    never stored (storing it would leak the tracer out of its trace).
+    Donation-safe: entries are kept as *host* arrays and every ``get``
+    materializes a fresh device buffer — the basis lands in optimizer
+    state that train steps donate, so handing out one shared device array
+    would leave the cache holding a deleted buffer after the first step.
+    """
+
+    def __init__(self):
+        self._store: dict[tuple[str, int, str], np.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, kind: str, n: int, dtype=jnp.float32) -> jax.Array:
+        key = (kind, int(n), jnp.dtype(dtype).name)
+        hit = self._store.get(key)
+        if hit is not None:
+            self.hits += 1
+            return jnp.asarray(hit)
+        q = get_backend(kind).matrix(int(n), dtype)
+        self.misses += 1
+        if not isinstance(q, jax.core.Tracer):
+            self._store[key] = np.asarray(q)
+        return q
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._store)}
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+_CACHE = BasisCache()
+
+
+def basis_cache() -> BasisCache:
+    """The process-wide cache instance (counters asserted in tests)."""
+    return _CACHE
+
+
+def shared_basis(kind: str, n: int, dtype=jnp.float32) -> jax.Array:
+    """The model-wide shared basis for ``kind``, via the process cache."""
+    return _CACHE.get(kind, n, dtype)
+
+
+# ---------------------------------------------------------------------------
+# basis-store keys (optimizer-state ``bases`` dict)
+# ---------------------------------------------------------------------------
+def normalize_basis_request(item) -> tuple[str, int]:
+    """``basis_sizes`` entries are ``(kind, n)`` pairs; bare ints are the
+    legacy spelling for the DCT basis."""
+    if isinstance(item, tuple):
+        kind, n = item
+        return kind, int(n)
+    return "dct", int(item)
+
+
+def basis_store_key(kind: str, n: int) -> str:
+    """Key of a basis in the optimizer-state ``bases`` dict. DCT keeps the
+    historical bare ``str(n)`` (checkpoint/state-tree compatibility);
+    other kinds are namespaced ``"kind:n"``."""
+    return str(n) if kind == "dct" else f"{kind}:{n}"

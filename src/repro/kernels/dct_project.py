@@ -1,9 +1,15 @@
-"""Fused DCT-projection kernel: ``S = G @ Q`` + per-column squared norms.
+"""Fused basis-projection kernel: ``S = G @ Q`` + per-column squared norms.
 
 The TPU-native replacement for the paper's Makhoul FFT fast path (DESIGN.md
 §2): one MXU-tiled matmul pass over ``G`` that simultaneously accumulates the
 column ranking statistic ``norms[j] = sum_i S[i, j]^2``, so the dynamic column
 selection needs no second read of ``S`` from HBM.
+
+The kernel is parameterized by the basis matrix ``Q`` — nothing in it is
+DCT-specific, so every predefined-basis backend (DCT/DST/Hadamard/
+random-orthogonal, core/transforms.py) dispatches through the same
+``pallas_call`` under fused mode "on" (the step-microbench dispatch spy
+pins that per kind).
 
 Inputs may carry arbitrary leading stacked-layer axes — ``(layers, m, n)`` or
 ``(layers, experts, m, n)`` from scan-stacked models. They are collapsed into

@@ -36,6 +36,12 @@ def build(argv=None):
     ap.add_argument("--fused", default=None,
                     choices=["auto", "on", "fft", "off"],
                     help="fused-step dispatch for the projected-Adam family")
+    ap.add_argument("--basis", default=None,
+                    choices=["dct", "dst", "hadamard", "randortho"],
+                    help="predefined orthogonal basis backend for "
+                         "dct_adamw (or the projector for galore/frugal/"
+                         "fira) — the whole fused/ZeRO/telemetry stack is "
+                         "basis-agnostic (docs/transforms.md)")
     ap.add_argument("--zero", default="off", choices=["off", "1"],
                     help="ZeRO-1 partitioning of the low-rank optimizer "
                          "state across the data axes; the fused step runs "
@@ -97,6 +103,16 @@ def main(argv=None) -> int:
             raise SystemExit(f"--fused applies to the projected-Adam family "
                              f"only, not {args.optimizer!r}")
         opt_kw["fused"] = args.fused
+    if args.basis is not None:
+        if args.optimizer == "dct_adamw":
+            opt_kw["basis"] = args.basis
+        elif args.optimizer in ("galore", "frugal", "fira"):
+            opt_kw["projector"] = args.basis
+        else:
+            # ldadamw is defined by its power-iteration projector; the
+            # non-family presets have no predefined-basis plug point
+            raise SystemExit("--basis applies to dct_adamw/galore/frugal/"
+                             f"fira, not {args.optimizer!r}")
     adaptive = args.adaptive_rank or args.adaptive_refresh
     zero_cfg = None
     mesh = None

@@ -5,6 +5,13 @@ in :mod:`repro.optim.transform` (DESIGN.md §4). ``TRANSFORMS`` exposes the
 matching *transform-level* factories (``GradientTransform`` builders) for
 composition: route them through ``partition`` for per-group policies or
 wrap them in ``inject_hyperparams`` for runtime hyperparameter control.
+
+The predefined orthogonal basis is itself pluggable (DESIGN.md §10):
+``dct_adamw`` takes ``basis=`` and ``galore``/``frugal``/``fira`` take
+``projector=`` — any registered backend kind
+(:func:`repro.core.transforms.backend_kinds`: dct/dst/hadamard/randortho)
+rides the identical fused/ZeRO/telemetry stack. Unknown kinds fail
+eagerly at construction with the allowed set in the message.
 """
 from __future__ import annotations
 

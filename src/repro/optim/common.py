@@ -25,7 +25,12 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dct import dct2_matrix
+from repro.core.transforms import (
+    basis_store_key,
+    get_backend,
+    normalize_basis_request,
+    shared_basis,
+)
 
 Schedule = Callable[[jax.Array], jax.Array] | float
 
@@ -113,7 +118,7 @@ def adam_update(g, mom: AdamMoments, step, b1, b2, eps) -> tuple[jax.Array, Adam
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class MatrixRule:
-    """Per-matrix-leaf rule. ``ctx`` carries step, shared DCT bases, prng."""
+    """Per-matrix-leaf rule. ``ctx`` carries step, shared bases, prng."""
 
     def init(self, shape, dtype) -> Any:
         raise NotImplementedError
@@ -123,8 +128,10 @@ class MatrixRule:
         (decoupled weight decay applied by the harness)."""
         raise NotImplementedError
 
-    def basis_sizes(self, shape) -> tuple[int, ...]:
-        """Which shared-basis orders this leaf needs (min oriented dim)."""
+    def basis_sizes(self, shape) -> tuple:
+        """Which shared bases this leaf needs: ``(kind, n)`` pairs, or bare
+        orders ``n`` (the legacy spelling for the DCT basis). Default: the
+        DCT basis at the min oriented dim."""
         return (oriented_dims(shape)[1],)
 
     needs_shared_basis: bool = False
@@ -144,7 +151,10 @@ class FullAdamLeaf(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class Context:
     step: jax.Array
-    bases: dict          # {"n": (n,n) DCT-II matrix} (may be empty)
+    # shared predefined bases, keyed by ``transforms.basis_store_key``:
+    # bare "n" for the DCT basis (historical), "kind:n" otherwise. May be
+    # empty (on-the-fly mode).
+    bases: dict
     key: jax.Array | None = None
     # telemetry channel (repro.telemetry.stats): the chain runtime installs
     # the active StatsCollector here; lowrank_project narrows it to a
@@ -187,12 +197,16 @@ class Context:
     def wants_stats(self) -> bool:
         return self.stats is not None
 
-    def basis(self, n: int, dtype=jnp.float32) -> jax.Array:
-        if self.bases and str(n) in self.bases:
-            return self.bases[str(n)].astype(dtype)
+    def basis(self, n: int, dtype=jnp.float32, kind: str = "dct") -> jax.Array:
+        """The shared ``(n, n)`` basis of ``kind`` — from the stored bases
+        when the runtime collected it, else rebuilt by the backend."""
+        key = basis_store_key(kind, n)
+        if self.bases and key in self.bases:
+            return self.bases[key].astype(dtype)
         # on-the-fly mode: the basis is recomputed inside the step — zero
-        # state memory, ~2*n^2 transcendental flops (negligible vs. matmuls)
-        return dct2_matrix(n, dtype)
+        # state memory, ~2*n^2 basis-construction flops (negligible vs.
+        # the matmuls)
+        return get_backend(kind).matrix(n, dtype)
 
 
 class HarnessState(NamedTuple):
@@ -229,9 +243,11 @@ def make_matrix_optimizer(
         if rule.needs_shared_basis and basis_mode == "stored":
             def collect(lbl, p):
                 if lbl == "lowrank":
-                    sizes.update(rule.basis_sizes(p.shape))
+                    sizes.update(normalize_basis_request(s)
+                                 for s in rule.basis_sizes(p.shape))
             jax.tree.map(collect, labels, params)
-        bases = {str(n): dct2_matrix(n, jnp.float32) for n in sorted(sizes)}
+        bases = {basis_store_key(k, n): shared_basis(k, n, jnp.float32)
+                 for k, n in sorted(sizes)}
 
         def leaf_init(lbl, p):
             if lbl == "lowrank":

@@ -22,7 +22,9 @@ Per 2D leaf (oriented so the projected dim is last, size n <= m):
     m, v = Adam moments on g_t; u = mhat / (sqrt(vhat) + eps)
     D    = u @ Q_crt^T (+ residual term)
 
-Execution dispatch (``fused`` field, DESIGN.md §3): for the dct projector
+Execution dispatch (``fused`` field, DESIGN.md §3): for every
+predefined-basis projector (a registered
+:class:`~repro.core.transforms.BasisBackend`: dct/dst/hadamard/randortho)
 the hot path runs through core/fused_step.py — one fused select+project
 pass over G (g_t extracted from S, no second matmul), one shared Q_r^T
 gather for both back-projections, and int8 EF consumed/produced by fused
@@ -38,8 +40,13 @@ import jax.numpy as jnp
 
 from repro.core import fused_step
 from repro.core.error_feedback import QuantizedBuffer, zeros_q8
-from repro.core.projectors import PROJECTOR_KINDS, Projector, rotation_matrix
+from repro.core.projectors import (
+    Projector,
+    projector_kinds,
+    rotation_matrix,
+)
 from repro.core.selection import index_overlap, topr_margin
+from repro.core.transforms import get_backend, is_backend
 from repro.telemetry import stats as tstats
 
 from .common import (
@@ -103,7 +110,7 @@ class ProjectedAdamRule(MatrixRule):
                 raise ValueError(f"{type(self).__name__}: unknown {name} "
                                  f"{value!r}; allowed: {allowed}")
 
-        check("projector", self.projector, PROJECTOR_KINDS)
+        check("projector", self.projector, projector_kinds())
         check("residual", self.residual, RESIDUAL_MODES)
         check("ef_dtype", self.ef_dtype, EF_DTYPES)
         check("ranking_norm", self.ranking_norm, RANKING_NORMS)
@@ -119,18 +126,34 @@ class ProjectedAdamRule(MatrixRule):
         """Index-into-shared-basis projectors keep only ``r`` integers of
         projector state and their whole step is row-parallel given one
         psum'd column statistic — the ZeRO-1 precondition (DESIGN.md §9).
-        Dense-basis refreshes (svd) need all rows and stay replicated.
+        Any registered basis backend with a row-decomposable energy
+        statistic (``backend.zero_shardable``) qualifies, as does the
+        identity-basis randperm; dense-basis refreshes (svd) need all
+        rows and stay replicated.
 
         The FIRA residual is also excluded: its ``phi`` scaling feeds
         psum'd norms into the *update arithmetic* (not just ranking), and
         a psum of per-shard partial sums rounds differently than the
         replicated single-pass reduction — it would break the bit-exact
         sharded/replicated contract the parity suite pins."""
-        return (self.projector in ("dct", "randperm")
-                and self.residual != "fira")
+        if self.residual == "fira":
+            return False
+        if is_backend(self.projector):
+            return get_backend(self.projector).zero_shardable
+        return self.projector == "randperm"
 
     def _proj(self):
         return Projector(kind=self.projector, r=self.rank, norm=self.ranking_norm)
+
+    def basis_sizes(self, shape) -> tuple:
+        """The shared basis this leaf needs: ``(kind, n)`` at the min
+        oriented dim (bare ``n`` for dct — the legacy store key). Dense
+        projector kinds (svd/power/random/randperm) request nothing, even
+        when ``needs_shared_basis`` was left True on the rule."""
+        if not is_backend(self.projector):
+            return ()
+        n = oriented_dims(shape)[1]
+        return ((self.projector, n),) if self.projector != "dct" else (n,)
 
     def init(self, shape, dtype):
         *batch, _, _ = shape
@@ -157,11 +180,15 @@ class ProjectedAdamRule(MatrixRule):
             gf, transposed = orient_right(g.astype(jnp.float32))
         rows, cols = gf.shape[-2], gf.shape[-1]
         r = min(self.rank, cols)
-        q = ctx.basis(cols, jnp.float32) if p.needs_shared_basis else None
+        backend = get_backend(self.projector) if is_backend(self.projector) \
+            else None
+        q = (ctx.basis(cols, jnp.float32, kind=self.projector)
+             if p.needs_shared_basis else None)
         mode = fused_step.resolve(self.fused)
-        # the fused dataflow exists for the index-into-shared-basis projector;
-        # dense-basis kinds keep the reference math (EF still goes fused)
-        fused = mode != "off" and self.projector == "dct"
+        # the fused dataflow exists for the index-into-shared-basis
+        # projectors (any registered basis backend); dense-basis kinds keep
+        # the reference math (EF still goes fused)
+        fused = mode != "off" and backend is not None
 
         if state.ef is not None:
             gf = fused_step.ef_add(gf, state.ef, mode=mode)
@@ -180,7 +207,7 @@ class ProjectedAdamRule(MatrixRule):
         # gf the step performs anyway.
         want_stats = ctx.wants_stats and self.emit_stats
         need_resid = self.residual != "discard"
-        idx_based = self.projector in ("dct", "randperm")
+        idx_based = p.index_based
         batch = gf.shape[:-2]
 
         def keep_aux(g_low):
@@ -221,7 +248,8 @@ class ProjectedAdamRule(MatrixRule):
             def refresh(_):
                 sp = fused_step.select_and_project(
                     gf, q, r, norm=self.ranking_norm, mode=mode,
-                    return_norms=want_stats, psum_axes=ctx.axis)
+                    return_norms=want_stats, psum_axes=ctx.axis,
+                    backend=backend)
                 new_proj, g_low = sp[0], sp[1]
                 out = (new_proj, g_low)
                 if self.rotate:
@@ -339,7 +367,8 @@ class ProjectedAdamRule(MatrixRule):
 
 
 def _rule(rule_kw) -> ProjectedAdamRule:
-    rule_kw.setdefault("needs_shared_basis", rule_kw.get("projector") == "dct")
+    rule_kw.setdefault("needs_shared_basis",
+                       is_backend(rule_kw.get("projector")))
     return ProjectedAdamRule(**rule_kw)
 
 
@@ -364,10 +393,12 @@ def dct_adamw_transform(lr: Schedule, *, rank: int = 128,
                         update_interval: int = 1, weight_decay: float = 0.01,
                         error_feedback: bool = True, ef_dtype: str = "q8",
                         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-                        fused: str = "auto",
+                        fused: str = "auto", basis: str = "dct",
                         overrides: dict | None = None) -> GradientTransform:
-    """Matrix-leaf DCT-AdamW pipeline for ``partition``/``inject_hyperparams``."""
-    rule = _rule(dict(rank=rank, projector="dct",
+    """Matrix-leaf DCT-AdamW pipeline for ``partition``/``inject_hyperparams``.
+    ``basis`` swaps the predefined orthogonal basis (any registered
+    backend: dct/dst/hadamard/randortho — docs/transforms.md)."""
+    rule = _rule(dict(rank=rank, projector=basis,
                       update_interval=update_interval, rotate=True,
                       residual="ef" if error_feedback else "discard",
                       ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps, fused=fused))
@@ -379,19 +410,29 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
               weight_decay: float = 0.01, error_feedback: bool = True,
               ef_dtype: str = "q8", b1: float = 0.9, b2: float = 0.999,
               eps: float = 1e-8, exact_rotation_matmul: bool = False,
-              fused: str = "auto", basis_mode: str = "stored",
+              fused: str = "auto", basis: str = "dct",
+              basis_mode: str = "stored",
               label_fn=None, overrides: dict | None = None,
               zero=None) -> Optimizer:
     """The paper's DCT-AdamW (Algorithm 2). ``fused`` selects the execution
-    layer: "auto" | "on" (Pallas kernels) | "fft" (Makhoul host fast path) |
-    "off" (jnp reference) — see core/fused_step.py / DESIGN.md §3.
+    layer: "auto" | "on" (Pallas kernels) | "fft" (the backend's fast
+    transform: Makhoul FFT for dct, FHT for hadamard) | "off" (jnp
+    reference) — see core/fused_step.py / DESIGN.md §3.
+    ``basis``: the predefined orthogonal basis — any registered
+    :class:`~repro.core.transforms.BasisBackend` kind
+    (dct/dst/hadamard/randortho); the whole fused/ZeRO/telemetry stack is
+    basis-agnostic (DESIGN.md §10).
     ``overrides``: per-leaf-path rule field overrides (e.g. per-layer ranks
     from the adaptive rank allocator, DESIGN.md §8)."""
+    if not is_backend(basis):
+        from repro.core.transforms import backend_kinds
+        raise ValueError(f"unknown basis {basis!r}; registered backends: "
+                         f"{backend_kinds()}")
     hk = dict(weight_decay=weight_decay, basis_mode=basis_mode,
               overrides=overrides, zero=zero)
     if label_fn is not None:
         hk["label_fn"] = label_fn
-    return _build(lr, dict(rank=rank, projector="dct",
+    return _build(lr, dict(rank=rank, projector=basis,
                            update_interval=update_interval, rotate=True,
                            residual="ef" if error_feedback else "discard",
                            ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps,
@@ -438,7 +479,8 @@ def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            fused: str = "auto", label_fn=None,
            overrides: dict | None = None, zero=None) -> Optimizer:
     """FRUGAL baseline: state-full low-rank AdamW + state-free SignSGD on the
-    residual. ``projector`` in {svd, dct, random, randperm} (paper Table 6)."""
+    residual. ``projector`` in {svd, random, randperm} or any registered
+    basis-backend kind (dct/dst/hadamard/randortho — paper Table 6)."""
     hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
     if label_fn is not None:
         hk["label_fn"] = label_fn

@@ -50,7 +50,11 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dct import dct2_matrix
+from repro.core.transforms import (
+    basis_store_key,
+    normalize_basis_request,
+    shared_basis,
+)
 
 from .common import (
     AdamMoments,
@@ -70,10 +74,13 @@ from .common import (
 class GradientTransform(NamedTuple):
     """Composable optimizer building block.
 
-    ``basis_sizes(params)`` declares which shared-DCT-basis orders the
-    transform needs; the chain runtime (``as_optimizer``) collects the
-    union over the whole stack and stores one ``(n, n)`` DCT-II matrix per
-    distinct order in the optimizer state (``basis_mode="stored"``).
+    ``basis_sizes(params)`` declares which shared predefined bases the
+    transform needs — ``(kind, n)`` pairs, or bare orders ``n`` (legacy
+    spelling for the DCT basis); the chain runtime (``as_optimizer``)
+    collects the union over the whole stack and stores one ``(n, n)``
+    basis matrix per distinct request in the optimizer state
+    (``basis_mode="stored"``), served from the process-wide
+    :class:`~repro.core.transforms.BasisCache`.
     """
 
     init: Callable[[Any], Any]
@@ -379,10 +386,11 @@ def lowrank_project(rule: MatrixRule, *,
     """Lift a per-matrix-leaf :class:`MatrixRule` to a whole-tree transform.
 
     Each leaf gets a per-leaf :class:`Context` whose PRNG key folds in a
-    stable hash of the leaf's tree path; the shared DCT bases arrive via
-    the chain runtime; the telemetry collector (if one is installed) is
-    narrowed to the leaf's path so the rule's :class:`SubspaceStats` land
-    under a stable key. Emits the rule's raw descent direction ``D`` —
+    stable hash of the leaf's tree path; the shared predefined bases (any
+    registered backend kind the rule requests) arrive via the chain
+    runtime; the telemetry collector (if one is installed) is narrowed to
+    the leaf's path so the rule's :class:`SubspaceStats` land under a
+    stable key. Emits the rule's raw descent direction ``D`` —
     compose with ``scale_by_learning_rate`` / ``add_decayed_weights``.
 
     ``overrides`` maps leaf tree paths (``path_str`` form, the same keys
@@ -463,10 +471,12 @@ def as_optimizer(transform: GradientTransform, *, seed: int = 0,
     """Close a transform into the ``Optimizer(init, update)`` interface.
 
     The runtime owns the global step, the PRNG key (per-step fold) and the
-    shared-DCT-basis store: ``basis_mode="stored"`` materializes one
-    ``(n, n)`` DCT-II matrix per distinct order requested by the stack
-    (the paper's whole-model shared basis); ``"onthefly"`` stores nothing
-    and lets ``Context.basis`` recompute inside the step.
+    shared-basis store: ``basis_mode="stored"`` materializes one ``(n, n)``
+    basis matrix per distinct ``(kind, n)`` requested by the stack (the
+    paper's whole-model shared basis, via the process-wide
+    :class:`~repro.core.transforms.BasisCache` so adaptive-controller
+    rebuilds re-use it); ``"onthefly"`` stores nothing and lets
+    ``Context.basis`` recompute inside the step.
 
     ``zero``: a :class:`repro.parallel.zero.ZeroConfig` enabling ZeRO-1
     partitioning of eligible low-rank leaf state across the data axes
@@ -480,7 +490,9 @@ def as_optimizer(transform: GradientTransform, *, seed: int = 0,
 
     def init(params):
         sizes = transform.basis_sizes(params) if basis_mode == "stored" else ()
-        bases = {str(n): dct2_matrix(n, jnp.float32) for n in sorted(sizes)}
+        reqs = sorted({normalize_basis_request(s) for s in sizes})
+        bases = {basis_store_key(k, n): shared_basis(k, n, jnp.float32)
+                 for k, n in reqs}
         return ChainState(
             step=jnp.zeros((), jnp.int32),
             key=jax.random.PRNGKey(seed),

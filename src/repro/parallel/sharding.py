@@ -388,8 +388,11 @@ def opt_state_specs(opt_state, params, p_specs, *, zero=None, mesh=None):
     EF payloads and per-row EF scales partition their oriented row dim
     over the config's data axes — matching the shard_map layout the
     distributed step runs with — while index sets and scalars replicate.
-    Ineligible leaves (dense-basis projector state, rows not divisible by
-    the shard count) keep the shape-matched placement.
+    Eligibility is basis-agnostic: any leaf whose projector state is an
+    index set into a shared basis (every registered
+    :class:`~repro.core.transforms.BasisBackend` kind, plus randperm)
+    qualifies; ineligible leaves (dense-basis projector state, rows not
+    divisible by the shard count) keep the shape-matched placement.
     """
     zinfo = None
     if zero is not None and zero.active:

@@ -29,11 +29,13 @@ it, which lets XLA overlap each leaf's gather with the next leaf's
 shard-local compute instead of serializing a collective per leaf.
 
 Scope: rules whose projector state is an *index set into the shared basis*
-(``dct`` / ``randperm`` — ``MatrixRule.zero_shardable``). Dense-basis
-projectors (svd / power / random) keep a per-matrix ``(n, r)`` basis whose
-refresh is not row-decomposable (SVD needs all rows); those leaves — and
-any leaf whose oriented row count does not divide the shard count — fall
-back to the replicated update path unchanged.
+(``MatrixRule.zero_shardable``) — any registered basis backend with a
+row-decomposable energy statistic (``BasisBackend.zero_shardable``:
+dct / dst / hadamard / randortho), plus the identity-basis ``randperm``.
+Dense-basis projectors (svd / power / random) keep a per-matrix ``(n, r)``
+basis whose refresh is not row-decomposable (SVD needs all rows); those
+leaves — and any leaf whose oriented row count does not divide the shard
+count — fall back to the replicated update path unchanged.
 """
 from __future__ import annotations
 

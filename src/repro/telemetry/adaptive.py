@@ -68,6 +68,22 @@ class AdaptiveOptimizerManager:
         self.optimizer = self.make_optimizer(ov or None)
         self._step_fn = self.make_step(self.optimizer)
 
+    def _rebuild(self, state):
+        from repro.core.transforms import basis_cache
+        from repro.telemetry.controllers import migrate_opt_state
+
+        self._build()
+        self.n_rebuilds += 1
+        # re-initing the optimizer serves the shared n×n bases from the
+        # process-wide BasisCache instead of recomputing them per rebuild
+        fresh_opt_state = self.optimizer.init(state.params)
+        cs = basis_cache().stats()
+        self.log(f"[adaptive] rebuild #{self.n_rebuilds}: basis cache "
+                 f"{cs['hits']} hits / {cs['misses']} misses "
+                 f"({cs['entries']} bases resident)")
+        migrated = migrate_opt_state(state.opt_state, fresh_opt_state)
+        return state._replace(opt_state=migrated)
+
     # -- Trainer plumbing ---------------------------------------------------
     def init_state(self):
         return self.make_train_state(self.optimizer)
@@ -104,15 +120,6 @@ class AdaptiveOptimizerManager:
         if not proposals:
             return None
         return self._rebuild(state)
-
-    def _rebuild(self, state):
-        from repro.telemetry.controllers import migrate_opt_state
-
-        self._build()
-        self.n_rebuilds += 1
-        fresh_opt_state = self.optimizer.init(state.params)
-        migrated = migrate_opt_state(state.opt_state, fresh_opt_state)
-        return state._replace(opt_state=migrated)
 
     # -- persistence (Trainer extra_state protocol) -------------------------
     def state_dict(self) -> dict:

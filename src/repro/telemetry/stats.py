@@ -1,11 +1,14 @@
 """In-jit subspace telemetry: the typed aux pytree and its collector.
 
-The two-step DCT selection computes, for free, the exact quantity that
-tells us how good the low-rank approximation is (§4.1: the column-norm
-mass of ``S = G @ Q``). :class:`SubspaceStats` packages that — plus the
-index-overlap drift and EF-buffer mass that the adaptive controllers need
-— as a per-leaf NamedTuple of small fp32 arrays (leading dims = stacked
-layers), emitted *inside* the traced optimizer update.
+The two-step dynamic column selection computes, for free, the exact
+quantity that tells us how good the low-rank approximation is (§4.1: the
+column-norm mass of ``S = G @ Q``). Every term is basis-agnostic — ``Q``
+may come from any registered orthogonal-basis backend (DCT/DST/Hadamard/
+random-orthogonal, core/transforms.py); orthogonality is all the
+captured-energy identity needs. :class:`SubspaceStats` packages that —
+plus the index-overlap drift and EF-buffer mass that the adaptive
+controllers need — as a per-leaf NamedTuple of small fp32 arrays (leading
+dims = stacked layers), emitted *inside* the traced optimizer update.
 
 Collection is out-of-band with respect to the ``Optimizer(init, update)``
 signature: a :class:`StatsCollector` is installed with :func:`collect`
@@ -36,6 +39,7 @@ class SubspaceStats(NamedTuple):
     no extra ``G``-sized passes (DESIGN.md §8)."""
 
     captured_energy: jax.Array   # ||Q_r^T G||_F^2 / ||G||_F^2 in [0, 1]
+    #                              (any orthogonal shared basis Q)
     topr_margin: jax.Array       # (v_r - v_{r+1})/v_1 of column energies;
     #                              -1 on steps where norms aren't resident
     index_overlap: jax.Array     # |idx_new ∩ idx_prev| / r at refresh
