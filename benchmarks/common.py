@@ -140,13 +140,19 @@ class _DispatchSpy:
                 "kernel through the chain API — dispatch regression")
 
 
-def compile_opt_step(rule, shape, *, seed: int = 0, telemetry: bool = False):
+def compile_opt_step(rule, shape, *, seed: int = 0, telemetry: bool = False,
+                     guard: bool = False):
     """Compile one full ``optimizer.update`` on a stacked lowrank leaf
     through the chain API (partition -> lowrank_project(rule)), under the
     dispatch spy. ``telemetry=True`` installs a stats collector around the
     traced update (the SubspaceStats pytree becomes a jit output) —
     exactly what enabling telemetry costs, benchmarks/telemetry_overhead.py
-    gates it. Returns (compiled, inputs, fresh_state_fn, spy, peak_bytes)."""
+    gates it. ``guard=True`` appends the in-jit anomaly guard tail from
+    ``make_train_step(..., guard=True)`` — ``all_finite_tree`` over the
+    produced updates plus the ``select_tree`` commit/reject point on the
+    optimizer state — exactly what ``--resilient`` costs per step,
+    benchmarks/resilience_overhead.py gates it.
+    Returns (compiled, inputs, fresh_state_fn, spy, peak_bytes)."""
     from repro.optim.transform import matrix_optimizer
 
     params = {"w": jnp.zeros(shape, jnp.float32)}
@@ -164,6 +170,18 @@ def compile_opt_step(rule, shape, *, seed: int = 0, telemetry: bool = False):
             return d, new_state, col.tree()
     else:
         update = opt.update
+
+    if guard:
+        from repro.train.resilience import all_finite_tree, select_tree
+
+        inner = update
+
+        def update(grads, state, params):
+            out = inner(grads, state, params)
+            d, new_state = out[0], out[1]
+            flag = all_finite_tree(d)
+            new_state = select_tree(flag, new_state, state)
+            return (d, new_state, flag) + tuple(out[2:])
 
     with _DispatchSpy() as spy:
         compiled = jax.jit(update, donate_argnums=1).lower(

@@ -1,4 +1,4 @@
-"""Fault-tolerance demo: crash mid-run, restart, resume from checkpoint.
+"""Fault-tolerance demo: crash/resume, then survive NaNs + checkpoint rot.
 
   PYTHONPATH=src python examples/fault_tolerance.py
 
@@ -8,7 +8,16 @@ finishes to 60 — resuming from step 30, not from scratch. This is the
 single-process version of what `--supervise` automates across real node
 failures; checkpoints are mesh-agnostic so the restart may use a
 different data-parallel width (elastic).
+
+Phase 3 turns on the resilience layer (docs/resilience.md) and drills it
+with a chaos plan: a three-batch NaN window plus a bit-flipped
+checkpoint behind its OK marker. The in-jit guard refuses the poisoned
+steps, the ladder escalates skip → rollback, the rollback quarantines
+the corrupted checkpoint and restores the older verified one, and the
+run still reaches its target step with finite parameters — the
+`--resilient --chaos plan.json` path of the CLI trainer, in-process.
 """
+import os
 import tempfile
 
 import jax
@@ -17,7 +26,13 @@ import jax.numpy as jnp
 from repro.data.synthetic import SyntheticLM
 from repro.models.config import ModelConfig
 from repro.optim.api import get_optimizer
+from repro.train.chaos import ChaosPlan, Fault
 from repro.train.loop import Trainer
+from repro.train.resilience import (
+    ResilienceConfig,
+    ResilienceManager,
+    all_finite_tree,
+)
 from repro.train.steps import init_state, make_train_step
 
 cfg = ModelConfig(
@@ -48,3 +63,33 @@ t2 = make_trainer()
 state = t2.run(total_steps=60)
 assert int(state.step) == 60
 print(f"finished at step {int(state.step)} — resumed, not restarted.")
+
+print("=== phase 3: resilient run under chaos (NaNs + checkpoint rot) ===")
+# lr_scale=True adds the inject_hyperparams seam rollbacks cut LR through
+res_opt = get_optimizer("dct_adamw", lr=1e-3, rank=16, lr_scale=True)
+plan = ChaosPlan([
+    Fault(step=15, site="grads", mode="nan"),       # three-batch NaN window:
+    Fault(step=16, site="grads", mode="nan"),       # two skips, then the
+    Fault(step=17, site="grads", mode="nan"),       # ladder rolls back —
+    Fault(step=15, site="checkpoint", mode="bitflip"),  # past the rotten
+])                                                      # newest checkpoint
+res_dir = tempfile.mkdtemp(prefix="repro_ft_chaos_")
+resilience = ResilienceManager(ResilienceConfig(max_skips=2, max_rollbacks=3))
+trainer = Trainer(
+    train_step=jax.jit(make_train_step(cfg, res_opt, guard=True, chaos=plan),
+                       donate_argnums=0),
+    init_state_fn=lambda: init_state(cfg, res_opt, jax.random.PRNGKey(0)),
+    batch_fn=plan.wrap_batch_fn(lambda s: ds.batch(jnp.int32(s))),
+    ckpt_dir=res_dir, ckpt_every=5, log_every=10,
+    resilience=resilience,
+    ckpt_fault_hook=plan.bind_checkpoint_dir(res_dir))
+state = trainer.run(total_steps=30)
+
+assert int(state.step) == 30, int(state.step)
+assert bool(all_finite_tree(state.params)), "params poisoned"
+assert resilience.n_skips == 2 and resilience.n_rollbacks == 1
+assert os.path.isdir(os.path.join(res_dir, "step_15.corrupt")), \
+    "corrupt checkpoint was not quarantined"
+print(f"finished at step {int(state.step)} with finite params after "
+      f"{resilience.n_skips} skips and {resilience.n_rollbacks} rollback — "
+      f"the bitflipped checkpoint was quarantined, the NaN window skipped.")

@@ -75,16 +75,36 @@ def build(argv=None):
                          "from index-overlap drift")
     ap.add_argument("--control-every", type=int, default=50,
                     help="steps between controller decisions")
+    # resilience + fault injection (DESIGN.md §11, docs/resilience.md)
+    ap.add_argument("--resilient", action="store_true",
+                    help="arm the in-jit anomaly guard and the host-side "
+                         "escalation ladder (skip -> rollback -> rollback+"
+                         "LR-cut -> halt); builds the optimizer with the "
+                         "lr_scale injected hyperparameter")
+    ap.add_argument("--max-skips", type=int, default=2,
+                    help="consecutive non-finite steps skipped before the "
+                         "ladder escalates to a rollback")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="rollbacks before the run halts (exit code 86)")
+    ap.add_argument("--lr-cut", type=float, default=0.5,
+                    help="LR factor applied on the 2nd+ rollback")
+    ap.add_argument("--chaos", default=None, metavar="PLAN.json",
+                    help="deterministic fault-injection plan "
+                         "(train/chaos.py; schema in docs/resilience.md)")
     return ap.parse_args(argv)
 
 
 def main(argv=None) -> int:
     args = build(argv)
     if args.supervise:
-        from repro.train.supervisor import supervise
+        from repro.train.supervisor import checkpoint_progress_fn, supervise
         child = [sys.executable, "-m", "repro.launch.train"] + [
             a for a in (argv or sys.argv[1:]) if a != "--supervise"]
-        return supervise(child)
+        # progress-aware restarts: the budget resets while checkpoints
+        # advance, and a crash loop (no progress) halts early
+        progress_fn = (checkpoint_progress_fn(args.ckpt_dir)
+                       if args.ckpt_dir else None)
+        return supervise(child, progress_fn=progress_fn)
 
     from repro.configs.registry import get_config
     from repro.data.synthetic import make_batch_fn
@@ -95,7 +115,23 @@ def main(argv=None) -> int:
 
     cfg = get_config(args.arch, smoke=args.smoke)
     lr = cosine_warmup(args.lr, args.warmup, args.steps)
+    chaos_plan = None
+    if args.chaos is not None:
+        from repro.train.chaos import ChaosPlan
+        chaos_plan = ChaosPlan.load(args.chaos)
+        print(f"[train] chaos plan armed: {len(chaos_plan.faults)} faults "
+              f"from {args.chaos}")
+    resilience = None
+    if args.resilient:
+        from repro.train.resilience import (ResilienceConfig,
+                                            ResilienceManager)
+        resilience = ResilienceManager(ResilienceConfig(
+            max_skips=args.max_skips, max_rollbacks=args.max_rollbacks,
+            lr_cut=args.lr_cut))
     opt_kw = {"weight_decay": args.weight_decay}
+    if args.resilient:
+        # the ladder's LR-cut rung needs the injected lr_scale leaf
+        opt_kw["lr_scale"] = True
     if args.optimizer != "adamw":
         opt_kw["rank"] = args.rank
     if args.fused is not None:
@@ -159,7 +195,9 @@ def main(argv=None) -> int:
         return get_optimizer(args.optimizer, lr=lr, **kw)
 
     def make_step(opt):
-        return jax.jit(make_train_step(cfg, opt, telemetry=telemetry_on),
+        return jax.jit(make_train_step(cfg, opt, telemetry=telemetry_on,
+                                       guard=args.resilient,
+                                       chaos=chaos_plan),
                        donate_argnums=0)
 
     batch_fn = make_batch_fn(cfg, args.seq_len, args.batch, seed=args.seed)
@@ -183,7 +221,16 @@ def main(argv=None) -> int:
 
     trainer_kw = dict(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=args.log_every,
-                      log_metrics=sink.log_metrics if sink else None)
+                      log_metrics=sink.log_metrics if sink else None,
+                      resilience=resilience)
+    if chaos_plan is not None and args.ckpt_dir:
+        trainer_kw["ckpt_fault_hook"] = chaos_plan.bind_checkpoint_dir(
+            args.ckpt_dir)
+
+    def trainer_batch_fn(s):
+        return batch_fn(jnp.int32(s))
+    if chaos_plan is not None:
+        trainer_batch_fn = chaos_plan.wrap_batch_fn(trainer_batch_fn)
 
     if adaptive:
         from repro.telemetry.adaptive import AdaptiveOptimizerManager
@@ -217,7 +264,7 @@ def main(argv=None) -> int:
             rank_allocator=allocator, refresh_scheduler=scheduler)
         trainer = Trainer(train_step=manager.step,
                           init_state_fn=manager.init_state,
-                          batch_fn=lambda s: batch_fn(jnp.int32(s)),
+                          batch_fn=trainer_batch_fn,
                           control_hook=manager.control_hook,
                           extra_state=manager, **trainer_kw)
     else:
@@ -249,8 +296,9 @@ def main(argv=None) -> int:
 
         trainer = Trainer(
             train_step=step_fn, init_state_fn=init_fn,
-            batch_fn=lambda s: batch_fn(jnp.int32(s)), **trainer_kw)
+            batch_fn=trainer_batch_fn, **trainer_kw)
 
+    from repro.train.resilience import HALT_EXIT_CODE, TrainingHalted
     try:
         if mesh is not None:
             from repro.parallel import compat
@@ -258,6 +306,11 @@ def main(argv=None) -> int:
                 state = trainer.run(total_steps=args.steps)
         else:
             state = trainer.run(total_steps=args.steps)
+    except TrainingHalted as e:
+        # rung 4: deterministic divergence — the diagnostic dump is already
+        # on disk; the exit code tells the supervisor not to restart
+        print(f"[train] halted: {e}")
+        return HALT_EXIT_CODE
     finally:
         if sink is not None:
             sink.close()

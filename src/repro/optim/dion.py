@@ -83,9 +83,11 @@ def dion_transform(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
 
 def dion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
          weight_decay: float = 0.01, b1: float = 0.9, b2: float = 0.999,
-         eps: float = 1e-8, label_fn=None) -> Optimizer:
+         eps: float = 1e-8, label_fn=None,
+         lr_scale: bool = False) -> Optimizer:
     rule = DionRule(rank=rank, mu=mu)
-    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps)
+    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps,
+              lr_scale=lr_scale)
     if label_fn is not None:
         kw["label_fn"] = label_fn
     return matrix_optimizer(rule, lr, **kw)

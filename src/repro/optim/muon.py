@@ -59,9 +59,11 @@ def muon_transform(lr: Schedule, *, mu: float = 0.95,
 
 def muon(lr: Schedule, *, mu: float = 0.95, weight_decay: float = 0.01,
          ns_steps: int = 5, nesterov: bool = True, b1: float = 0.9,
-         b2: float = 0.999, eps: float = 1e-8, label_fn=None) -> Optimizer:
+         b2: float = 0.999, eps: float = 1e-8, label_fn=None,
+         lr_scale: bool = False) -> Optimizer:
     rule = MuonRule(mu=mu, ns_steps=ns_steps, nesterov=nesterov)
-    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps)
+    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps,
+              lr_scale=lr_scale)
     if label_fn is not None:
         kw["label_fn"] = label_fn
     return matrix_optimizer(rule, lr, **kw)

@@ -413,7 +413,7 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
               fused: str = "auto", basis: str = "dct",
               basis_mode: str = "stored",
               label_fn=None, overrides: dict | None = None,
-              zero=None) -> Optimizer:
+              zero=None, lr_scale: bool = False) -> Optimizer:
     """The paper's DCT-AdamW (Algorithm 2). ``fused`` selects the execution
     layer: "auto" | "on" (Pallas kernels) | "fft" (the backend's fast
     transform: Makhoul FFT for dct, FHT for hadamard) | "off" (jnp
@@ -429,7 +429,7 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
         raise ValueError(f"unknown basis {basis!r}; registered backends: "
                          f"{backend_kinds()}")
     hk = dict(weight_decay=weight_decay, basis_mode=basis_mode,
-              overrides=overrides, zero=zero)
+              overrides=overrides, zero=zero, lr_scale=lr_scale)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=basis,
@@ -443,12 +443,14 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
 def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,
             error_feedback: bool = True, b1: float = 0.9, b2: float = 0.999,
             eps: float = 1e-8, fused: str = "auto", label_fn=None,
-            overrides: dict | None = None, zero=None) -> Optimizer:
+            overrides: dict | None = None, zero=None,
+            lr_scale: bool = False) -> Optimizer:
     """LDAdamW baseline: block power iteration, per-step subspace, rotation
     via real r x r matmul of two stored projection matrices. ``fused``
     covers the EF quantize/dequant kernels (the power projector itself
     keeps the reference math)."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero,
+              lr_scale=lr_scale)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector="power", update_interval=1,
@@ -462,9 +464,11 @@ def galore(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
            fused: str = "auto", label_fn=None,
-           overrides: dict | None = None, zero=None) -> Optimizer:
+           overrides: dict | None = None, zero=None,
+           lr_scale: bool = False) -> Optimizer:
     """GaLore baseline: SVD every T_u steps, residual discarded, no rotation."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero,
+              lr_scale=lr_scale)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
@@ -477,11 +481,13 @@ def frugal(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
            weight_decay: float = 0.01, projector: str = "svd",
            b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
            fused: str = "auto", label_fn=None,
-           overrides: dict | None = None, zero=None) -> Optimizer:
+           overrides: dict | None = None, zero=None,
+           lr_scale: bool = False) -> Optimizer:
     """FRUGAL baseline: state-full low-rank AdamW + state-free SignSGD on the
     residual. ``projector`` in {svd, random, randperm} or any registered
     basis-backend kind (dct/dst/hadamard/randortho — paper Table 6)."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero,
+              lr_scale=lr_scale)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,
@@ -494,9 +500,11 @@ def fira(lr: Schedule, *, rank: int = 128, update_interval: int = 200,
          weight_decay: float = 0.01, projector: str = "svd",
          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
          fused: str = "auto", label_fn=None,
-         overrides: dict | None = None, zero=None) -> Optimizer:
+         overrides: dict | None = None, zero=None,
+         lr_scale: bool = False) -> Optimizer:
     """FIRA baseline: low-rank AdamW + norm-scaled full-rank residual."""
-    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero)
+    hk = dict(weight_decay=weight_decay, overrides=overrides, zero=zero,
+              lr_scale=lr_scale)
     if label_fn is not None:
         hk["label_fn"] = label_fn
     return _build(lr, dict(rank=rank, projector=projector,

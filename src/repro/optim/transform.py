@@ -355,6 +355,25 @@ def add_decayed_weights(weight_decay: float, *,
     return stateless(upd)
 
 
+def lr_scale_transform(initial: float = 1.0) -> GradientTransform:
+    """A runtime LR multiplier as an injected hyperparameter.
+
+    Appended at the end of a chain it scales the *final* update — exactly
+    what scaling the learning rate would do (descent and tied weight decay
+    alike). Its ``lr_scale`` state leaf is what the resilience ladder's
+    LR-cut rung rewrites between steps
+    (:func:`repro.train.resilience.scale_hyperparam` — pure state surgery,
+    zero retrace). Enable via ``as_optimizer(..., lr_scale=True)``.
+    """
+
+    def factory(lr_scale: float = 1.0) -> GradientTransform:
+        return stateless(
+            lambda updates, params, ctx: jax.tree.map(
+                lambda u: u * lr_scale, updates))
+
+    return inject_hyperparams(factory)(lr_scale=float(initial))
+
+
 def scale_by_adam(b1: float = 0.9, b2: float = 0.999,
                   eps: float = 1e-8) -> GradientTransform:
     """Full-rank Adam direction ``mhat / (sqrt(vhat) + eps)`` per leaf,
@@ -467,7 +486,8 @@ class ChainState(NamedTuple):
 
 
 def as_optimizer(transform: GradientTransform, *, seed: int = 0,
-                 basis_mode: str = "stored", zero=None) -> Optimizer:
+                 basis_mode: str = "stored", zero=None,
+                 lr_scale: bool = False) -> Optimizer:
     """Close a transform into the ``Optimizer(init, update)`` interface.
 
     The runtime owns the global step, the PRNG key (per-step fold) and the
@@ -483,10 +503,16 @@ def as_optimizer(transform: GradientTransform, *, seed: int = 0,
     (DESIGN.md §9). It rides the :class:`Context` into every transform;
     ``lowrank_project`` resolves it against the mesh active at trace time,
     so one optimizer object works on any topology (including none).
+
+    ``lr_scale=True`` appends :func:`lr_scale_transform` — the resilience
+    ladder's retrace-free LR-cut seam (off by default: the chain and its
+    state are then bit-identical to builds that predate the knob).
     """
     if basis_mode not in ("stored", "onthefly"):
         raise ValueError(f"unknown basis_mode {basis_mode!r}; expected "
                          f"'stored' or 'onthefly'")
+    if lr_scale:
+        transform = chain(transform, lr_scale_transform())
 
     def init(params):
         sizes = transform.basis_sizes(params) if basis_mode == "stored" else ()
@@ -531,6 +557,7 @@ def matrix_optimizer(
     fullrank_weight_decay: bool = True,
     overrides: dict[str, dict] | None = None,
     zero=None,
+    lr_scale: bool = False,
 ) -> Optimizer:
     """The classic matrix-optimizer preset, rebuilt as a chain: route
     matrix leaves to ``rule`` and everything else to full-rank Adam, then
@@ -538,8 +565,9 @@ def matrix_optimizer(
     the legacy ``make_matrix_optimizer`` (bit-for-bit, see
     tests/test_transform_api.py). ``overrides`` is the per-leaf-path rule
     field override map forwarded to :func:`lowrank_project` (the adaptive
-    rank/refresh controllers' plug point); ``zero`` is the ZeRO-1 state
-    partitioning config forwarded to :func:`as_optimizer`."""
+    rank/refresh controllers' plug point); ``zero`` and ``lr_scale``
+    (the resilience ladder's LR-cut seam) are forwarded to
+    :func:`as_optimizer`."""
     routes = {"lowrank": lowrank_project(rule, overrides=overrides),
               "full": scale_by_adam(b1, b2, eps)}
     if fullrank_weight_decay:
@@ -552,4 +580,5 @@ def matrix_optimizer(
                              add_decayed_weights(weight_decay, schedule=lr)),
             "full": chain(routes["full"], scale_by_learning_rate(lr)),
         }, label_fn)
-    return as_optimizer(t, seed=seed, basis_mode=basis_mode, zero=zero)
+    return as_optimizer(t, seed=seed, basis_mode=basis_mode, zero=zero,
+                        lr_scale=lr_scale)

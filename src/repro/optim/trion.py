@@ -111,12 +111,12 @@ def trion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
           ranking_norm: str = "l2", dct_method: str = "matmul",
           momentum_dtype: str = "float32", basis_mode: str = "stored",
           b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-          label_fn=None) -> Optimizer:
+          label_fn=None, lr_scale: bool = False) -> Optimizer:
     rule = TrionRule(rank=rank, mu=mu, ns_steps=ns_steps,
                      ranking_norm=ranking_norm, dct_method=dct_method,
                      momentum_dtype=momentum_dtype)
     kw = dict(weight_decay=weight_decay, basis_mode=basis_mode,
-              b1=b1, b2=b2, eps=eps)
+              b1=b1, b2=b2, eps=eps, lr_scale=lr_scale)
     if label_fn is not None:
         kw["label_fn"] = label_fn
     return matrix_optimizer(rule, lr, **kw)

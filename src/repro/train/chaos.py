@@ -1,0 +1,246 @@
+"""Deterministic fault injection (chaos harness) for the train substrate.
+
+A :class:`ChaosPlan` is a list of :class:`Fault` records keyed on
+``(step, site)`` — fully deterministic, JSON-serializable, replayable —
+that the training stack consults at well-defined seams:
+
+========== =================== ==============================================
+site       modes               seam
+========== =================== ==============================================
+grads      nan, inf            in-jit: ``make_train_step(chaos=plan)`` adds
+                               the fault value to every gradient leaf on the
+                               matching *data* step (traced compare against
+                               the ``_chaos_step`` scalar the plan's batch
+                               wrapper stamps into each batch)
+checkpoint sigkill, abort      ``CheckpointManager.fault_hook``: SIGKILL the
+                               process (or, for in-process tests, kill just
+                               the writer thread) at a precise write stage
+                               — ``arg`` selects ``pre_write`` / ``mid_write``
+                               / ``pre_publish`` (default)
+checkpoint truncate, bitflip   corrupt the just-published ``state.npz``
+                               behind its OK marker (silent storage rot)
+data       delay               sleep ``arg`` seconds inside ``batch_fn`` on
+                               the matching step (straggler)
+========== =================== ==============================================
+
+Faults are keyed on the **data step** (what ``batch_fn`` receives), so the
+ladder's recovery semantics compose: a skipped batch or a rolled-back
+data window moves past the faulty step instead of replaying it forever —
+exactly how a data-dependent NaN behaves in production. ``steps`` may be
+a list to model a persistent fault (e.g. NaN on every batch of a window,
+which forces the ladder past the skip rung).
+
+Driven by ``launch/train.py --chaos plan.json`` and
+``tests/test_resilience.py``; the plan format is documented in
+docs/resilience.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import time
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from .checkpoint import _WriterInterrupt
+
+_SITES = {
+    "grads": ("nan", "inf"),
+    "checkpoint": ("sigkill", "abort", "truncate", "bitflip"),
+    "data": ("delay",),
+}
+_STAGES = ("pre_write", "mid_write", "pre_publish", "published")
+_CHAOS_KEY = "_chaos_step"
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One deterministic fault. ``step`` is the data step (``grads`` /
+    ``data`` sites) or the checkpoint step (``checkpoint`` site); ``arg``
+    is mode-specific: the write stage for ``sigkill``/``abort``, the sleep
+    seconds for ``delay``, ignored otherwise."""
+
+    step: int
+    site: str
+    mode: str
+    arg: Any = None
+
+    def __post_init__(self):
+        if self.site not in _SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"have {sorted(_SITES)}")
+        if self.mode not in _SITES[self.site]:
+            raise ValueError(f"site {self.site!r} has no mode "
+                             f"{self.mode!r}; have {_SITES[self.site]}")
+        if self.mode in ("sigkill", "abort") and self.arg is not None \
+                and self.arg not in _STAGES:
+            raise ValueError(f"checkpoint stage {self.arg!r} unknown; "
+                             f"have {_STAGES}")
+
+
+class ChaosPlan:
+    """A deterministic fault schedule plus the host bookkeeping (one-shot
+    firing for host-side faults; in-jit faults are pure functions of the
+    data step, so they need none)."""
+
+    def __init__(self, faults: list[Fault] | None = None, *,
+                 log_fn: Callable[[str], None] = print):
+        self.faults = list(faults or [])
+        self.log = log_fn
+        self._fired: set[int] = set()   # host-side one-shot bookkeeping
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_spec(cls, spec: list[dict] | dict,
+                  log_fn: Callable[[str], None] = print) -> "ChaosPlan":
+        """Build from the JSON schema: a list of fault dicts (or
+        ``{"faults": [...]}``); each dict's ``step`` may be an int or a
+        list of ints (expanded to one fault per step)."""
+        if isinstance(spec, dict):
+            spec = spec.get("faults", [])
+        faults = []
+        for rec in spec:
+            rec = dict(rec)
+            steps = rec.pop("step")
+            if not isinstance(steps, (list, tuple)):
+                steps = [steps]
+            for s in steps:
+                faults.append(Fault(step=int(s), **rec))
+        return cls(faults, log_fn=log_fn)
+
+    @classmethod
+    def load(cls, path: str,
+             log_fn: Callable[[str], None] = print) -> "ChaosPlan":
+        with open(path) as f:
+            return cls.from_spec(json.load(f), log_fn=log_fn)
+
+    def to_spec(self) -> list[dict]:
+        return [dataclasses.asdict(f) for f in self.faults]
+
+    def at(self, site: str) -> list[Fault]:
+        return [f for f in self.faults if f.site == site]
+
+    # -- in-jit: gradient tampering ----------------------------------------
+    def tamper_grads(self, chaos_step, grads):
+        """Inside the traced step: add the fault value to every gradient
+        leaf when the batch's data step matches. The compare is traced, so
+        the compiled step is identical across steps (no retrace); with no
+        ``grads`` faults in the plan, the graph is untouched."""
+        import jax
+
+        for f in self.at("grads"):
+            bad = jnp.float32(jnp.nan if f.mode == "nan" else jnp.inf)
+            hit = jnp.equal(chaos_step, f.step)
+            grads = jax.tree.map(
+                lambda g: g + jnp.where(hit, bad, 0.0).astype(g.dtype),
+                grads)
+        return grads
+
+    # -- host: batch_fn wrapper --------------------------------------------
+    def wrap_batch_fn(self, batch_fn):
+        """Stamp ``_chaos_step`` (an int32 scalar of the data step) into
+        every batch — the traced key ``tamper_grads`` compares against —
+        and serve ``data``-site faults (straggler delays)."""
+
+        def wrapped(step):
+            s = int(step)
+            for f in self.at("data"):
+                if f.step == s and self._fire(f):
+                    delay = float(f.arg or 1.0)
+                    self.log(f"[chaos] delaying batch {s} by {delay:g}s")
+                    time.sleep(delay)
+            batch = dict(batch_fn(step))
+            batch[_CHAOS_KEY] = jnp.int32(s)
+            return batch
+
+        return wrapped
+
+    # -- host: checkpoint faults -------------------------------------------
+    def checkpoint_hook(self, stage: str, step: int) -> None:
+        """``CheckpointManager.fault_hook`` adapter: write-stage kills and
+        post-publish corruption. The manager calls it inline from whichever
+        thread is writing, so ``abort`` tears exactly the stage it names."""
+        for f in self.at("checkpoint"):
+            if f.step != step or not self._matches_stage(f, stage):
+                continue
+            if not self._fire(f):
+                continue
+            if f.mode == "sigkill":
+                self.log(f"[chaos] SIGKILL at checkpoint step {step} "
+                         f"stage {stage}")
+                os.kill(os.getpid(), signal.SIGKILL)
+            elif f.mode == "abort":
+                self.log(f"[chaos] aborting checkpoint writer at step "
+                         f"{step} stage {stage}")
+                raise _WriterInterrupt()
+            elif f.mode in ("truncate", "bitflip"):
+                self._corrupt(f, step)
+
+    @staticmethod
+    def _matches_stage(f: Fault, stage: str) -> bool:
+        if f.mode in ("sigkill", "abort"):
+            return stage == (f.arg or "pre_publish")
+        return stage == "published"     # corruption hits the landed files
+
+    def _corrupt(self, f: Fault, step: int) -> None:
+        # self.dir is unknown here; the hook closure carries it
+        raise RuntimeError("corruption faults need a bound directory — "
+                           "use bind_checkpoint_dir()")
+
+    def bind_checkpoint_dir(self, directory: str):
+        """Return a ``fault_hook`` bound to the checkpoint directory (the
+        corruption modes need to know where the published files live)."""
+        plan = self
+
+        def _corrupt(f: Fault, step: int) -> None:
+            path = os.path.join(directory, f"step_{step}", "state.npz")
+            if not os.path.exists(path):            # pragma: no cover
+                return
+            corrupt_file(path, mode=f.mode)
+            plan.log(f"[chaos] {f.mode} applied to {path} (behind OK)")
+
+        def hook(stage: str, step: int) -> None:
+            plan._corrupt, orig = _corrupt, plan._corrupt
+            try:
+                plan.checkpoint_hook(stage, step)
+            finally:
+                plan._corrupt = orig
+
+        return hook
+
+    def _fire(self, f: Fault) -> bool:
+        key = id(f)
+        if key in self._fired:
+            return False
+        self._fired.add(key)
+        return True
+
+
+def corrupt_file(path: str, *, mode: str = "bitflip") -> None:
+    """Silent storage rot, concentrated: truncate a file to half, or flip
+    one bit in the middle — both keep the OK marker and the manifest
+    intact, which is exactly the failure CRC verification exists for."""
+    size = os.path.getsize(path)
+    if mode == "truncate":
+        with open(path, "r+b") as fh:
+            fh.truncate(max(size // 2, 1))
+    elif mode == "bitflip":
+        with open(path, "r+b") as fh:
+            fh.seek(size // 2)
+            byte = fh.read(1)
+            fh.seek(size // 2)
+            fh.write(bytes([byte[0] ^ 0x10]))
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+
+
+def strip_chaos_key(batch: dict) -> tuple[dict, Any]:
+    """Split the plan's traced step scalar out of a batch (the model must
+    never see it). Returns ``(clean_batch, chaos_step_or_None)``."""
+    if _CHAOS_KEY not in batch:
+        return batch, None
+    batch = dict(batch)
+    return batch, batch.pop(_CHAOS_KEY)

@@ -1,10 +1,26 @@
-"""Fault-tolerant checkpointing: atomic, keep-k, async, mesh-agnostic.
+"""Fault-tolerant checkpointing: atomic, verified, keep-k, async.
 
 Format: one directory per step containing a flat .npz of every leaf
 (path-keyed) plus a manifest. Writes go to ``<dir>.tmp`` then os.rename —
 a crash mid-write can never corrupt the latest checkpoint. Saves are
 offloaded to a writer thread (``async_save``) so the train loop never
 blocks on storage; ``wait()`` drains before exit/preemption.
+
+Integrity (DESIGN.md §11): the manifest records a per-leaf CRC32 plus
+shape/dtype for every array in ``state.npz``. ``restore`` re-checksums
+what it loaded and raises :class:`CheckpointCorruptError` on any mismatch
+— an ``OK`` marker only proves the *write* completed, not that the bytes
+survived the storage layer. ``restore_latest`` walks backwards through
+older checkpoints, quarantining (``step_N.corrupt``) anything that fails
+verification, so one rotted ``state.npz`` costs a rollback window, not
+the run.
+
+Concurrency: the sync and async save paths share one discipline — a
+pending writer is always drained before a new save starts, and the
+publish (rename + keep-k GC) and every directory scan happen under
+``self._lock``, so ``all_steps``/``restore`` never race the writer
+thread's GC. Orphaned ``step_*.tmp`` dirs (a writer killed mid-write) are
+swept at startup.
 
 Checkpoints are saved *unsharded-logical* (fully addressable host arrays):
 restore takes the target mesh/shardings and uses jax.device_put with the
@@ -17,6 +33,13 @@ one logical host array, and restore re-partitions onto the *current*
 topology's specs (``sharding.opt_state_specs(zero=...)``) — save on a
 (2, 4) mesh, resume on (4, 2) or a different DP width entirely
 (asserted in tests/test_zero_parity.py).
+
+``fault_hook(stage, step)`` is the chaos seam (train/chaos.py): called at
+``"pre_write"`` / ``"mid_write"`` (after state.npz, before OK) /
+``"pre_publish"`` / ``"published"``, it lets the fault-injection harness
+kill or abort the writer at a precise point, or corrupt a checkpoint the
+instant it lands — tests/test_resilience.py drives the whole recovery
+path through it.
 """
 from __future__ import annotations
 
@@ -25,13 +48,18 @@ import os
 import re
 import shutil
 import threading
-from typing import Any
+import zlib
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _SEP = "||"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (CRC/shape/dtype/read)."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -53,16 +81,72 @@ def _unflatten_into(tree, flat: dict[str, np.ndarray]):
     return jax.tree_util.tree_map_with_path(rebuild, tree)
 
 
+def _integrity(flat: dict[str, np.ndarray]) -> dict[str, dict]:
+    """Per-leaf CRC32 + shape/dtype — the manifest's verification record."""
+    return {
+        key: {
+            # tobytes() serializes in C order regardless of layout, so the
+            # CRC is deterministic across save-time strides
+            "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+        for key, arr in flat.items()
+    }
+
+
+def _check_integrity(step: int, flat: dict[str, np.ndarray],
+                     leaves: dict[str, dict]) -> None:
+    """Raise CheckpointCorruptError on any CRC/shape/dtype mismatch."""
+    missing = sorted(set(leaves) - set(flat))
+    if missing:
+        raise CheckpointCorruptError(
+            f"step {step}: state.npz is missing leaves {missing[:4]}"
+            + ("..." if len(missing) > 4 else ""))
+    for key, rec in leaves.items():
+        arr = flat[key]
+        if list(arr.shape) != list(rec["shape"]) \
+                or str(arr.dtype) != rec["dtype"]:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {key!r} is "
+                f"{arr.dtype}{list(arr.shape)}, manifest says "
+                f"{rec['dtype']}{rec['shape']}")
+        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        if crc != rec["crc32"]:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {key!r} CRC mismatch "
+                f"(got {crc:#010x}, manifest {rec['crc32']:#010x})")
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, *,
+                 fault_hook: Callable[[str, int], None] | None = None,
+                 log: Callable[[str], None] = print):
         self.dir = directory
         self.keep = keep
+        self.log = log
+        self.fault_hook = fault_hook
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
         self._pending: threading.Thread | None = None
+        # a writer killed mid-write leaves step_*.tmp behind; it can never
+        # become visible (publish is a rename) but it wastes space and a
+        # retried save at the same step must start clean
+        for name in os.listdir(directory):
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
+
+    def _fault(self, stage: str, step: int) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(stage, step)
 
     # -- discovery ----------------------------------------------------------
     def all_steps(self) -> list[int]:
+        with self._lock:
+            return self._all_steps_locked()
+
+    def _all_steps_locked(self) -> list[int]:
         steps = []
         for name in os.listdir(self.dir):
             m = re.fullmatch(r"step_(\d+)", name)
@@ -83,24 +167,92 @@ class CheckpointManager:
         with open(path) as f:
             return json.load(f)
 
+    # -- integrity ----------------------------------------------------------
+    def _load_verified(self, step: int) -> dict[str, np.ndarray]:
+        """Load step's flat arrays and verify them against the manifest.
+
+        Checkpoints written before the integrity format (no ``"leaves"``
+        record) load unverified — backward compatible."""
+        base = os.path.join(self.dir, f"step_{step}")
+        try:
+            manifest = self.manifest(step)
+            with np.load(os.path.join(base, "state.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+        except CheckpointCorruptError:
+            raise
+        except Exception as e:            # torn zip, missing file, bad json
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable checkpoint ({type(e).__name__}: "
+                f"{e})") from e
+        leaves = manifest.get("leaves")
+        if leaves is not None:
+            _check_integrity(step, flat, leaves)
+        return flat
+
+    def verify(self, step: int) -> None:
+        """Raise :class:`CheckpointCorruptError` unless ``step`` loads and
+        matches its manifest's per-leaf CRC32/shape/dtype record."""
+        self._load_verified(step)
+
+    def quarantine(self, step: int) -> str:
+        """Move a corrupt checkpoint aside (``step_N.corrupt``) so
+        discovery never offers it again; returns the new path."""
+        with self._lock:
+            src = os.path.join(self.dir, f"step_{step}")
+            dst = src + ".corrupt"
+            n = 0
+            while os.path.exists(dst):
+                n += 1
+                dst = f"{src}.corrupt{n}"
+            os.rename(src, dst)
+        self.log(f"[ckpt] quarantined corrupt checkpoint step {step} "
+                 f"-> {os.path.basename(dst)}")
+        return dst
+
+    def latest_verified_step(self, *, quarantine: bool = True) -> int | None:
+        """Newest step that passes verification, walking backwards through
+        the retained checkpoints; corrupt ones are quarantined (so the
+        next call — or a restarted process — skips straight past them)."""
+        for step in reversed(self.all_steps()):
+            try:
+                self.verify(step)
+                return step
+            except CheckpointCorruptError as e:
+                self.log(f"[ckpt] verification failed: {e}")
+                if quarantine:
+                    self.quarantine(step)
+        return None
+
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, state: Any, extra: dict | None = None):
-        """Synchronous atomic save."""
+    def _write(self, step: int, flat: dict[str, np.ndarray],
+               extra: dict | None) -> None:
         final = os.path.join(self.dir, f"step_{step}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "state.npz"), **_flatten(state))
-        manifest = {"step": int(step), **(extra or {})}
+        self._fault("pre_write", step)
+        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        manifest = {"step": int(step), "format": 2,
+                    "leaves": _integrity(flat), **(extra or {})}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        self._fault("mid_write", step)
         with open(os.path.join(tmp, "OK"), "w") as f:
             f.write("ok")
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)           # atomic publish
-        self._gc()
+        self._fault("pre_publish", step)
+        with self._lock:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)       # atomic publish
+            self._gc_locked()
+        self._fault("published", step)
+
+    def save(self, step: int, state: Any, extra: dict | None = None):
+        """Synchronous atomic save (drains any pending async writer first —
+        two writers GC'ing the same directory is the classic torn-keep-k)."""
+        self.wait()
+        self._write(step, _flatten(state), extra)
 
     def async_save(self, step: int, state: Any, extra: dict | None = None):
         """Device->host copy happens on the caller thread (cheap, required
@@ -108,23 +260,16 @@ class CheckpointManager:
         flat = _flatten(state)          # snapshot now
         self.wait()
 
-        def _write():
-            final = os.path.join(self.dir, f"step_{step}")
-            tmp = final + ".tmp"
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(tmp)
-            np.savez(os.path.join(tmp, "state.npz"), **flat)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump({"step": int(step), **(extra or {})}, f)
-            with open(os.path.join(tmp, "OK"), "w") as f:
-                f.write("ok")
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._gc()
+        def _bg():
+            try:
+                self._write(step, flat, extra)
+            except _WriterInterrupt:
+                # chaos harness killed the writer mid-write: the torn
+                # step_*.tmp stays behind (startup sweeps it), the
+                # published checkpoints are untouched
+                pass
 
-        self._pending = threading.Thread(target=_write, daemon=True)
+        self._pending = threading.Thread(target=_bg, daemon=True)
         self._pending.start()
 
     def wait(self):
@@ -132,21 +277,21 @@ class CheckpointManager:
             self._pending.join()
             self._pending = None
 
-    def _gc(self):
-        with self._lock:
-            steps = self.all_steps()
-            for s in steps[:-self.keep] if self.keep else []:
-                shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
-                              ignore_errors=True)
+    def _gc_locked(self):
+        steps = self._all_steps_locked()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
     def restore(self, step: int, target: Any, shardings: Any | None = None):
         """Restore into the structure of ``target`` (a pytree of arrays or
-        ShapeDtypeStructs). With ``shardings`` (pytree of NamedSharding for
-        the *current* mesh), leaves are placed sharded — the saved file is
+        ShapeDtypeStructs), verifying the loaded bytes against the
+        manifest's integrity record (:class:`CheckpointCorruptError` on
+        mismatch). With ``shardings`` (pytree of NamedSharding for the
+        *current* mesh), leaves are placed sharded — the saved file is
         mesh-agnostic, so this reshards elastically."""
-        path = os.path.join(self.dir, f"step_{step}", "state.npz")
-        flat = dict(np.load(path))
+        flat = self._load_verified(step)
         tree = _unflatten_into(target, flat)
         if shardings is not None:
             tree = jax.tree.map(
@@ -154,7 +299,15 @@ class CheckpointManager:
         return tree
 
     def restore_latest(self, target: Any, shardings: Any | None = None):
-        step = self.latest_step()
+        """Restore the newest checkpoint that passes verification, falling
+        back through older ones (corrupt dirs are quarantined). Returns
+        ``(None, None)`` when nothing verifiable remains."""
+        step = self.latest_verified_step()
         if step is None:
             return None, None
         return step, self.restore(step, target, shardings)
+
+
+class _WriterInterrupt(BaseException):
+    """Raised by a chaos fault hook to kill the async writer mid-write
+    (the in-process stand-in for SIGKILL'ing the host at that instant)."""

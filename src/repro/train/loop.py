@@ -29,6 +29,7 @@ topology change).
 """
 from __future__ import annotations
 
+import os
 import signal
 import time
 from typing import Any, Callable
@@ -38,6 +39,7 @@ import jax
 from repro.data.pipeline import DataPipeline
 
 from .checkpoint import CheckpointManager
+from .resilience import TrainingHalted
 from .steps import TrainState
 
 
@@ -48,11 +50,15 @@ class Trainer:
                  log_fn: Callable[[str], None] = print,
                  log_metrics: Callable[[dict], None] | None = None,
                  control_hook=None, extra_state=None,
-                 state_shardings=None):
+                 state_shardings=None, resilience=None,
+                 ckpt_fault_hook=None):
         self.train_step = train_step
         self.init_state_fn = init_state_fn
         self.batch_fn = batch_fn
-        self.ckpt = CheckpointManager(ckpt_dir, keep) if ckpt_dir else None
+        self.ckpt = (CheckpointManager(ckpt_dir, keep,
+                                       fault_hook=ckpt_fault_hook,
+                                       log=log_fn)
+                     if ckpt_dir else None)
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.log = log_fn
@@ -60,6 +66,7 @@ class Trainer:
         self.control_hook = control_hook
         self.extra_state = extra_state
         self.state_shardings = state_shardings
+        self.resilience = resilience
         self._preempted = False
         self._window: list[float] = []
 
@@ -91,34 +98,64 @@ class Trainer:
             self.log_metrics(record)
 
     def _ckpt_extra(self) -> dict | None:
-        if self.extra_state is None:
-            return None
-        return {"extra_state": self.extra_state.state_dict()}
+        extra = {}
+        if self.extra_state is not None:
+            extra["extra_state"] = self.extra_state.state_dict()
+        if self.resilience is not None:
+            extra["resilience"] = self.resilience.state_dict()
+        return extra or None
+
+    def _load_checkpoint(self, step: int, *,
+                         load_resilience: bool) -> TrainState:
+        """Restore ``step``: manifest-carried state first (controller state
+        shapes the restore target; the ladder's counters only on a fresh
+        resume — a mid-run rollback must *keep* its escalation state), then
+        the arrays, then re-impose the cumulative LR cut (the checkpointed
+        ``lr_scale`` leaf predates the cuts)."""
+        manifest = self.ckpt.manifest(step)
+        if self.extra_state is not None:
+            extra = manifest.get("extra_state")
+            if extra:
+                self.extra_state.load_state_dict(extra)
+        if load_resilience and self.resilience is not None:
+            rs = manifest.get("resilience")
+            if rs:
+                self.resilience.load_state_dict(rs)
+        state = self.ckpt.restore(step, self.init_state_fn(),
+                                  shardings=self.state_shardings)
+        if self.resilience is not None:
+            state = state._replace(
+                opt_state=self.resilience.apply_lr_scale(state.opt_state))
+        return state
 
     def run(self, total_steps: int, resume: bool = True) -> TrainState:
         self._install_sigterm()
+        res = self.resilience
         start = 0
-        resume_step = None
+        state = None
         if resume and self.ckpt is not None:
-            resume_step = self.ckpt.latest_step()
-            if resume_step is not None and self.extra_state is not None:
-                # controller state first: it shapes the restore target
-                extra = self.ckpt.manifest(resume_step).get("extra_state")
-                if extra:
-                    self.extra_state.load_state_dict(extra)
-        state = self.init_state_fn()
-        if resume_step is not None:
-            state = self.ckpt.restore(resume_step, state,
-                                      shardings=self.state_shardings)
-            start = resume_step
-            self.log(f"[trainer] resumed from checkpoint step {resume_step}")
+            # newest checkpoint that passes CRC verification — corrupt ones
+            # are quarantined and the next-older candidate is tried
+            resume_step = self.ckpt.latest_verified_step()
+            if resume_step is not None:
+                state = self._load_checkpoint(resume_step,
+                                              load_resilience=True)
+                start = resume_step
+                self.log(f"[trainer] resumed from checkpoint step "
+                         f"{resume_step}")
+        if state is None:
+            state = self.init_state_fn()
 
-        pipeline = DataPipeline(self.batch_fn, start_step=start)
+        offset = res.data_offset if res is not None else 0
+        pipeline = DataPipeline(self.batch_fn, start_step=start + offset)
         losses = []
+        step = start
         try:
-            for step in range(start, total_steps):
+            while step < total_steps:
                 t0 = time.perf_counter()
-                batch = pipeline.get(step)
+                data_step = step + (res.data_offset if res is not None
+                                    else 0)
+                batch = pipeline.get(data_step)
                 state, metrics = self.train_step(state, batch)
                 # block on the loss before stopping the clock — the same
                 # sync point the historic float(loss) imposed — so
@@ -132,19 +169,48 @@ class Trainer:
                     # the controllers (instead of per-field fetches twice)
                     metrics["telemetry"] = jax.device_get(
                         metrics["telemetry"])
-                # metrics_history keeps scalars only: retaining every
-                # step's per-leaf stats pytree would grow device memory
-                # unbounded, and the sink's ring/file already persist them
-                losses.append({k: v for k, v in metrics.items()
-                               if k != "telemetry"})
-                self._emit(step + 1, metrics, dt)
-                if self.control_hook is not None:
-                    new_state = self.control_hook(step + 1, state, metrics)
-                    if new_state is not None:
-                        state = new_state
+                committed = True
+                if res is not None:
+                    action = res.observe(
+                        step + 1, float(metrics["loss"]),
+                        bool(metrics.get("all_finite", True)))
+                    if action.reason:
+                        self.log(f"[resilience] {action.kind}: "
+                                 f"{action.reason}")
+                    if action.kind == "skip":
+                        # the guard already refused the update in-jit; the
+                        # optimizer step stands still, the data step moves
+                        # past the offending batch (offset+1 keeps the
+                        # prefetch stream contiguous)
+                        res.skipped()
+                        committed = False
+                    elif action.kind == "rollback":
+                        state, step, pipeline = self._rollback(step,
+                                                               pipeline)
+                        committed = False
+                    elif action.kind == "halt":
+                        if self.ckpt is not None:
+                            res.dump(os.path.join(self.ckpt.dir,
+                                                  "halt.json"),
+                                     context={"trainer_step": step})
+                        raise TrainingHalted(action.reason)
+                if committed:
+                    # metrics_history keeps scalars only: retaining every
+                    # step's per-leaf stats pytree would grow device memory
+                    # unbounded, and the sink's ring/file persist them
+                    losses.append({k: v for k, v in metrics.items()
+                                   if k != "telemetry"})
+                    self._emit(step + 1, metrics, dt)
+                    if self.control_hook is not None:
+                        new_state = self.control_hook(step + 1, state,
+                                                      metrics)
+                        if new_state is not None:
+                            state = new_state
+                    step += 1
                 if self.ckpt is not None and (
-                        (step + 1) % self.ckpt_every == 0 or self._preempted):
-                    self.ckpt.async_save(step + 1, state,
+                        (committed and step % self.ckpt_every == 0)
+                        or self._preempted):
+                    self.ckpt.async_save(step, state,
                                          extra=self._ckpt_extra())
                 if self._preempted:
                     self.log("[trainer] SIGTERM -> checkpointed, exiting")
@@ -155,3 +221,29 @@ class Trainer:
                 self.ckpt.wait()
         self.metrics_history = losses
         return state
+
+    def _rollback(self, step: int, pipeline):
+        """Ladder rung 2/3: restore the last verified checkpoint (or a
+        fresh init when none survives verification), shift the data window
+        past the offending batches, and rebuild the prefetch pipeline on
+        the shifted stream."""
+        if self.ckpt is not None:
+            self.ckpt.wait()            # never read under a pending writer
+            to_step = self.ckpt.latest_verified_step()
+        else:
+            to_step = None
+        if to_step is not None:
+            state = self._load_checkpoint(to_step, load_resilience=False)
+        else:
+            # nothing restorable — roll all the way back to initialization
+            to_step = 0
+            state = self.init_state_fn()
+            state = state._replace(
+                opt_state=self.resilience.apply_lr_scale(state.opt_state))
+        self.log(f"[trainer] rollback: step {step} -> {to_step}")
+        self.resilience.rolled_back(from_step=step, to_step=to_step)
+        pipeline.close()
+        pipeline = DataPipeline(
+            self.batch_fn,
+            start_step=to_step + self.resilience.data_offset)
+        return state, to_step, pipeline

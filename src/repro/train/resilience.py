@@ -1,0 +1,304 @@
+"""Resilient training: in-jit anomaly guards + a host-side escalation
+ladder (DESIGN.md §11, docs/resilience.md).
+
+The paper's pitch is cheap low-rank optimization for *long* pre-training
+runs; what kills long runs in practice is not throughput but a NaN that
+checkpoints itself, a loss spike that compounds for thousands of steps, or
+a corrupted ``state.npz`` discovered only at restore time. This module is
+the policy layer over three mechanisms:
+
+**In-jit guard** (``make_train_step(..., guard=True)``): the step computes
+one ``all_finite`` flag from quantities that are already resident — the
+loss, the gradient global norm (``isfinite`` of a sum of squares catches
+any NaN/Inf in the tree), and a per-leaf ``isfinite().all()`` over the
+updates (fused by XLA into the pass that produces them). The new state is
+then selected *inside* the jitted step — ``jnp.where(flag, new, old)`` per
+leaf — which is the only correct place: with ``donate_argnums=0`` the old
+state's buffers are donated, so the host can never "keep the old state"
+after the fact. Untouched leaves (shared bases, the PRNG key, keep-step
+index sets) select between identical tensors and XLA folds the select
+away, so the lowered HLO differs from an unguarded step only by the
+finite-flag selects (gated ≤1 % flops/bytes by
+``benchmarks/resilience_overhead.py``).
+
+**Escalation ladder** (:class:`ResilienceManager`): the host consumes the
+flag (and a loss-vs-EMA divergence signal) every step and escalates:
+
+1. *skip* — the guard already refused the update; drop the offending
+   batch (the data step advances, the optimizer step does not) and retry
+   with fresh data, up to ``max_skips`` consecutive times;
+2. *rollback* — restore the last **verified** checkpoint
+   (``CheckpointManager.restore_latest`` walks past corrupt ones) and
+   skip the offending data window, so the deterministic batch sequence
+   cannot re-poison the run;
+3. *rollback + LR cut* — subsequent rollbacks also cut the learning rate
+   by ``lr_cut`` through the ``inject_hyperparams`` state leaf
+   (:func:`scale_hyperparam` — pure state surgery, zero retrace);
+4. *halt* — a deterministic divergence that survives rollbacks and LR
+   cuts is not recoverable by restarting; dump diagnostics and exit with
+   :data:`HALT_EXIT_CODE` so the supervisor stops instead of burning its
+   restart budget on a crash loop.
+
+The ladder's counters (and the cumulative LR scale and data offset) ride
+the checkpoint manifest, so a preemption mid-recovery resumes mid-ladder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+#: Exit code for an unrecoverable halt (rung 4). The supervisor treats it
+#: as permanent — no restart, the failure is deterministic.
+HALT_EXIT_CODE = 86
+
+
+class TrainingHalted(RuntimeError):
+    """Raised when the escalation ladder is exhausted (rung 4)."""
+
+
+# ---------------------------------------------------------------------------
+# in-jit guard primitives
+# ---------------------------------------------------------------------------
+def all_finite_tree(tree) -> jax.Array:
+    """Scalar bool: every element of every inexact leaf is finite.
+
+    Per-leaf ``isfinite().all()`` reductions fuse with the producers of the
+    leaves (the update arithmetic), so checking a tree that is already
+    being materialized costs no extra memory traffic."""
+    flag = jnp.asarray(True)
+    for leaf in jax.tree.leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+            flag = jnp.logical_and(flag, jnp.isfinite(leaf).all())
+    return flag
+
+
+def select_tree(flag: jax.Array, new, old):
+    """``jnp.where(flag, new, old)`` on every leaf of two same-structure
+    trees — the donation-safe commit/reject point of the guarded step.
+    Leaves the step did not touch are the *same* tensor in both trees and
+    XLA folds their select away."""
+    return jax.tree.map(lambda n, o: jnp.where(flag, n, o), new, old)
+
+
+def scale_hyperparam(opt_state, name: str, factor) -> tuple[Any, int]:
+    """Multiply every ``inject_hyperparams`` state entry called ``name`` by
+    ``factor`` — pure value surgery on the optimizer state (same shapes,
+    same dtypes), so the already-compiled step keeps running without a
+    retrace. Returns ``(new_state, n_scaled)``; ``n_scaled == 0`` means
+    the optimizer was built without that injected hyperparameter."""
+    hits = 0
+
+    def visit(kp, leaf):
+        nonlocal hits
+        if len(kp) >= 2 \
+                and getattr(kp[-2], "name", None) == "hyperparams" \
+                and str(getattr(kp[-1], "key", "")) == name:
+            hits += 1
+            return (leaf * jnp.asarray(factor, leaf.dtype)).astype(leaf.dtype)
+        return leaf
+
+    new_state = jax.tree_util.tree_map_with_path(visit, opt_state)
+    return new_state, hits
+
+
+# ---------------------------------------------------------------------------
+# host-side escalation ladder
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs of the escalation ladder (docs/resilience.md for the guide)."""
+
+    #: consecutive bad steps tolerated as plain batch skips before the
+    #: ladder escalates to a rollback
+    max_skips: int = 2
+    #: rollbacks (to the last verified checkpoint) before the run halts
+    max_rollbacks: int = 3
+    #: learning-rate factor applied on the second and later rollbacks
+    #: (through the ``lr_scale`` injected hyperparameter; cumulative)
+    lr_cut: float = 0.5
+    #: loss > spike_factor * EMA(loss) counts as a divergence signal
+    spike_factor: float = 4.0
+    #: EMA decay for the divergence reference
+    ema_decay: float = 0.98
+    #: healthy steps before spike detection arms (the reference is noise
+    #: until the EMA has seen a window)
+    ema_warmup: int = 10
+    #: consecutive spiking (but finite) steps tolerated before rollback —
+    #: finite spikes have already been committed, so there is no skip rung
+    spike_patience: int = 3
+    #: healthy steps after which the rollback budget heals back to zero
+    #: (an isolated recovered incident should not count against a fault
+    #: thousands of steps later)
+    heal_steps: int = 200
+
+
+class Action(NamedTuple):
+    """One ladder decision. ``kind``: ``ok`` | ``skip`` | ``rollback`` |
+    ``halt``. ``lr_factor`` < 1 asks the trainer to cut the LR after the
+    rollback restore; ``reason`` is the log/diagnostic line."""
+
+    kind: str
+    reason: str = ""
+    lr_factor: float = 1.0
+
+
+class ResilienceManager:
+    """Consumes per-step health signals, emits ladder :class:`Action`\\ s,
+    and owns the recovery bookkeeping that must survive restarts
+    (cumulative ``lr_scale``, the data-window ``data_offset``, the
+    rollback budget). The Trainer executes the actions; this class never
+    touches device state itself."""
+
+    def __init__(self, cfg: ResilienceConfig | None = None, *,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = cfg or ResilienceConfig()
+        self.log = log_fn
+        self.consecutive_bad = 0
+        self.consecutive_spikes = 0
+        self.n_rollbacks = 0
+        self.n_skips = 0
+        self.healthy_streak = 0
+        self.lr_scale = 1.0
+        self.data_offset = 0
+        self.loss_ema: float | None = None
+        self.ema_steps = 0
+        self.halted: str | None = None
+        self._recent: list[dict] = []   # rolling diagnostics window
+
+    # -- policy -------------------------------------------------------------
+    def observe(self, step: int, loss: float, all_finite: bool) -> Action:
+        """Classify one completed step and decide the ladder rung.
+
+        ``all_finite=False`` means the in-jit guard already refused the
+        update (state unchanged); a finite loss above ``spike_factor`` ×
+        EMA is a divergence signal on a step that *did* commit — it has no
+        skip rung, only patience before rollback."""
+        self._recent.append({"step": step, "loss": float(loss),
+                             "all_finite": bool(all_finite)})
+        del self._recent[:-50]
+        if not all_finite:
+            self.consecutive_bad += 1
+            self.healthy_streak = 0
+            if self.consecutive_bad <= self.cfg.max_skips:
+                self.n_skips += 1
+                return Action("skip",
+                              f"non-finite step ({self.consecutive_bad}/"
+                              f"{self.cfg.max_skips} consecutive)")
+            return self._escalate("non-finite steps persist through "
+                                  f"{self.cfg.max_skips} skipped batches")
+        spiking = (self.ema_steps >= self.cfg.ema_warmup
+                   and self.loss_ema is not None
+                   and loss > self.cfg.spike_factor * self.loss_ema)
+        if spiking:
+            self.consecutive_spikes += 1
+            self.healthy_streak = 0
+            if self.consecutive_spikes <= self.cfg.spike_patience:
+                return Action("ok",
+                              f"loss spike {loss:.3g} vs EMA "
+                              f"{self.loss_ema:.3g} ({self.consecutive_spikes}"
+                              f"/{self.cfg.spike_patience})")
+            return self._escalate(
+                f"loss diverged: {loss:.3g} > {self.cfg.spike_factor:g}x "
+                f"EMA {self.loss_ema:.3g} for "
+                f"{self.cfg.spike_patience} steps")
+        # healthy step: update the divergence reference, heal the ladder
+        self.consecutive_bad = 0
+        self.consecutive_spikes = 0
+        self.healthy_streak += 1
+        d = self.cfg.ema_decay
+        self.loss_ema = (loss if self.loss_ema is None
+                         else d * self.loss_ema + (1.0 - d) * loss)
+        self.ema_steps += 1
+        if self.healthy_streak == self.cfg.heal_steps and self.n_rollbacks:
+            self.log(f"[resilience] {self.cfg.heal_steps} healthy steps — "
+                     f"rollback budget healed")
+            self.n_rollbacks = 0
+        return Action("ok")
+
+    def _escalate(self, reason: str) -> Action:
+        self.consecutive_bad = 0
+        self.consecutive_spikes = 0
+        self.n_rollbacks += 1
+        if self.n_rollbacks > self.cfg.max_rollbacks:
+            self.halted = (f"{reason}; ladder exhausted after "
+                           f"{self.cfg.max_rollbacks} rollbacks")
+            return Action("halt", self.halted)
+        lr_factor = self.cfg.lr_cut if self.n_rollbacks >= 2 else 1.0
+        if lr_factor != 1.0:
+            self.lr_scale *= lr_factor
+        return Action("rollback",
+                      f"{reason} (rollback {self.n_rollbacks}/"
+                      f"{self.cfg.max_rollbacks}"
+                      + (f", lr x{self.lr_scale:g}" if lr_factor != 1.0
+                         else "") + ")",
+                      lr_factor=lr_factor)
+
+    def rolled_back(self, from_step: int, to_step: int) -> None:
+        """Trainer callback after a restore: shift the data window past the
+        offending batches and reset the divergence reference (the EMA was
+        tracking the diverged trajectory)."""
+        # next fetch at trainer step `to_step` must consume the batch
+        # *after* the one that went bad at trainer step `from_step`
+        self.data_offset += (from_step - to_step) + 1
+        self.loss_ema = None
+        self.ema_steps = 0
+        self.healthy_streak = 0
+
+    def skipped(self) -> None:
+        """Trainer callback after a skip: the optimizer step is retried
+        with the next batch, so the data window advances by one."""
+        self.data_offset += 1
+
+    def apply_lr_scale(self, opt_state):
+        """Re-impose the cumulative LR cut on a freshly restored optimizer
+        state (the checkpointed ``lr_scale`` leaf predates the cuts)."""
+        if self.lr_scale == 1.0:
+            return opt_state
+        new_state, hits = scale_hyperparam(opt_state, "lr_scale",
+                                           self.lr_scale)
+        if not hits:
+            self.log("[resilience] LR-cut rung unavailable: optimizer has "
+                     "no injected 'lr_scale' hyperparameter (build it with "
+                     "lr_scale=True); continuing with plain rollback")
+            return opt_state
+        return new_state
+
+    # -- diagnostics --------------------------------------------------------
+    def dump(self, path: str, context: dict | None = None) -> str:
+        """Write the halt diagnostic (ladder state + the recent-step
+        window) as JSON; returns the path."""
+        record = {
+            "halted": self.halted,
+            "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "ladder": self.state_dict(),
+            "recent_steps": self._recent,
+            **(context or {}),
+        }
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        self.log(f"[resilience] halt diagnostics -> {path}")
+        return path
+
+    # -- persistence (rides the checkpoint manifest) ------------------------
+    def state_dict(self) -> dict:
+        return {
+            "n_rollbacks": self.n_rollbacks,
+            "n_skips": self.n_skips,
+            "lr_scale": self.lr_scale,
+            "data_offset": self.data_offset,
+            "healthy_streak": self.healthy_streak,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self.n_rollbacks = int(d.get("n_rollbacks", 0))
+        self.n_skips = int(d.get("n_skips", 0))
+        self.lr_scale = float(d.get("lr_scale", 1.0))
+        self.data_offset = int(d.get("data_offset", 0))
+        self.healthy_streak = int(d.get("healthy_streak", 0))

@@ -82,7 +82,8 @@ def grad_fn(params, batch, cfg):
 
 
 def make_train_step(cfg, optimizer, *, grad_clip: float = 1.0,
-                    accum_dtype: str = "float32", telemetry: bool = False):
+                    accum_dtype: str = "float32", telemetry: bool = False,
+                    guard: bool = False, chaos=None):
     """(TrainState, batch) -> (TrainState, metrics).
 
     ``accum_dtype``: microbatch gradient-accumulator dtype. fp32 default;
@@ -93,10 +94,28 @@ def make_train_step(cfg, optimizer, *, grad_clip: float = 1.0,
     optimizer update; the per-leaf :class:`SubspaceStats` the rules emit
     come back under ``metrics["telemetry"]`` (DESIGN.md §8). Off by
     default — the graph is then bit-identical to a telemetry-free build.
+
+    ``guard=True`` arms the in-jit anomaly guard (DESIGN.md §11): one
+    ``all_finite`` flag over loss / gradient norm / updates decides —
+    *inside* the jitted step, donation-safe — whether the new state
+    commits or the old one passes through unchanged
+    (``resilience.select_tree``); the flag comes back under
+    ``metrics["all_finite"]`` for the host-side escalation ladder. Off by
+    default: the lowered HLO is then bit-identical to a guard-free build
+    (``benchmarks/resilience_overhead.py`` gates the armed overhead).
+
+    ``chaos``: a :class:`~repro.train.chaos.ChaosPlan` whose ``grads``
+    faults are injected into the traced step, keyed on the data step the
+    plan's batch wrapper stamps into each batch (tests/CI only).
     """
     adt = jnp.dtype(accum_dtype)
 
     def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        chaos_step = None
+        if chaos is not None:
+            from repro.train.chaos import strip_chaos_key
+
+            batch, chaos_step = strip_chaos_key(batch)
         b = batch["tokens"].shape[0]
         mb = cfg.train_microbatch or b
         n_micro = max(1, b // mb)
@@ -117,6 +136,9 @@ def make_train_step(cfg, optimizer, *, grad_clip: float = 1.0,
                 lambda p: jnp.zeros(p.shape, adt), state.params)
             grads, ms = jax.lax.scan(acc_step, zeros, micro)
             metrics = jax.tree.map(lambda x: x.mean(), ms)
+
+        if chaos is not None and chaos_step is not None:
+            grads = chaos.tamper_grads(chaos_step, grads)
 
         if grad_clip:
             grads, gnorm = _clip_by_global_norm(grads, grad_clip)
@@ -141,7 +163,23 @@ def make_train_step(cfg, optimizer, *, grad_clip: float = 1.0,
                                                 state.params)
         new_params = apply_updates(state.params, updates)
         metrics["grad_norm"] = gnorm
-        return TrainState(state.step + 1, new_params, new_opt), metrics
+        new_state = TrainState(state.step + 1, new_params, new_opt)
+        if guard:
+            from repro.train.resilience import all_finite_tree, select_tree
+
+            # one flag over loss / grad-norm / updates: gnorm is a sum of
+            # squares over every gradient leaf, so any NaN/Inf anywhere in
+            # the gradients poisons it for free; updates cover the
+            # optimizer's own arithmetic. The commit point is a per-leaf
+            # select between new and old state — donation-safe (the donated
+            # old buffers feed the select, never aliased ambiguously), and
+            # XLA folds select(p, x, x) for leaves the step didn't change.
+            flag = (jnp.isfinite(metrics["loss"])
+                    & jnp.isfinite(gnorm)
+                    & all_finite_tree(updates))
+            new_state = select_tree(flag, new_state, state)
+            metrics["all_finite"] = flag
+        return new_state, metrics
 
     return train_step
 

@@ -5,24 +5,89 @@ Runs the training entrypoint in a child process; on a non-zero exit
 checkpoint, with capped exponential backoff and a max-restart budget.
 Because checkpoints are mesh-agnostic (train/checkpoint.py), the restarted
 run may come back with a different data-parallel width (elastic).
+
+Progress-aware restarts (DESIGN.md §11): a crash is only worth a restart
+if restarts can make progress. ``progress_fn`` (typically
+:func:`checkpoint_progress_fn` over the run's checkpoint dir) is sampled
+before and after every attempt — the supervisor logs the child's resume
+context, *resets* the restart budget whenever the checkpoint step
+advanced (a run that keeps moving deserves fresh attempts), and halts
+after ``crash_loop_limit`` consecutive no-progress restarts (a
+deterministic crash right after restore would otherwise burn the whole
+budget replaying itself). A child exiting with
+:data:`~repro.train.resilience.HALT_EXIT_CODE` has already diagnosed its
+failure as deterministic (escalation-ladder rung 4) and is never
+restarted.
 """
 from __future__ import annotations
 
 import subprocess
 import sys
 import time
+from typing import Callable
+
+from .resilience import HALT_EXIT_CODE
+
+
+def checkpoint_progress_fn(ckpt_dir: str) -> Callable[[], int | None]:
+    """A ``progress_fn`` reading the latest published checkpoint step in
+    ``ckpt_dir`` (a pure directory scan — no verification, no manager
+    side effects; the child verifies on restore)."""
+    import os
+    import re
+
+    def fn() -> int | None:
+        steps = []
+        try:
+            names = os.listdir(ckpt_dir)
+        except FileNotFoundError:
+            return None
+        for name in names:
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(ckpt_dir, name, "OK")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+    return fn
 
 
 def supervise(cmd: list[str], *, max_restarts: int = 10,
               backoff_s: float = 2.0, max_backoff_s: float = 60.0,
-              log=print) -> int:
+              log=print, progress_fn: Callable[[], int | None] | None = None,
+              crash_loop_limit: int = 3) -> int:
     attempt = 0
+    no_progress = 0
     while True:
+        before = progress_fn() if progress_fn is not None else None
+        if progress_fn is not None:
+            log(f"[supervisor] resume context: latest checkpoint step "
+                f"{before if before is not None else '<none>'}")
         log(f"[supervisor] launching (attempt {attempt + 1}): {' '.join(cmd)}")
         proc = subprocess.run(cmd)
+        after = progress_fn() if progress_fn is not None else None
         if proc.returncode == 0:
             log("[supervisor] clean exit")
             return 0
+        if proc.returncode == HALT_EXIT_CODE:
+            log(f"[supervisor] child halted deliberately (exit "
+                f"{HALT_EXIT_CODE}: escalation ladder exhausted) — "
+                f"not restarting")
+            return proc.returncode
+        if progress_fn is not None:
+            log(f"[supervisor] child exited {proc.returncode}; checkpoint "
+                f"step {before if before is not None else '<none>'} -> "
+                f"{after if after is not None else '<none>'}")
+            if after is not None and (before is None or after > before):
+                if attempt or no_progress:
+                    log("[supervisor] checkpoint advanced — restart "
+                        "budget reset")
+                attempt = 0
+                no_progress = 0
+            else:
+                no_progress += 1
+                if no_progress >= crash_loop_limit:
+                    log(f"[supervisor] crash loop: {no_progress} restarts "
+                        f"without checkpoint progress — halting")
+                    return proc.returncode
         attempt += 1
         if attempt > max_restarts:
             log(f"[supervisor] giving up after {max_restarts} restarts")
