@@ -18,6 +18,10 @@ Sections:
                                          -> BENCH_basis_transforms.json
   basis_errors         DESIGN.md §10     per-basis selection error vs the
                                          rank-r SVD optimum
+  serve_decode         DESIGN.md §12     paged continuous-batching decode:
+                                         paged-vs-dense cache bytes, tok/s
+                                         static vs churn, flash-decode
+                                         dispatch gate -> BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -35,8 +39,8 @@ def main(argv=None) -> int:
     steps = 15 if args.fast else 40
 
     from . import (dct_adamw_vs_ldadamw, finetune, frugal_fira,
-                   makhoul_vs_matmul, projection_errors, telemetry_overhead,
-                   trion_vs_dion)
+                   makhoul_vs_matmul, projection_errors, serve_decode,
+                   telemetry_overhead, trion_vs_dion)
 
     sections = {
         "trion_vs_dion": lambda: trion_vs_dion.run(steps=steps),
@@ -77,6 +81,13 @@ def main(argv=None) -> int:
                       else "BENCH_basis_transforms.json")),
         "basis_errors": lambda: projection_errors.run_basis_errors(
             steps=4 if args.fast else 10),
+        # paged serving decode; the memory assert and the flash-decode
+        # dispatch gate hard-fail in both modes (fast mode: fewer tokens,
+        # scratch path so the committed record isn't clobbered)
+        "serve_decode": lambda: serve_decode.run(
+            new_tokens=8 if args.fast else 32,
+            out_path=("BENCH_serve_fast.json" if args.fast
+                      else "BENCH_serve.json")),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     failures = 0

@@ -1,0 +1,157 @@
+"""Paged continuous-batching decode benchmark -> BENCH_serve.json.
+
+Three claims, one JSON record (DESIGN.md §12):
+
+  * memory — the paged pool is smaller than a dense KV cache of equal
+    serving capacity (``num_slots`` sequences of up to ``max_seq_len``);
+    the pool oversubscribes because blocks are granted on demand, and
+    the record hard-asserts ``paged_cache_bytes < dense_bytes_equivalent``.
+  * throughput — decode tok/s with a full static batch vs. under
+    admit/retire churn (staggered submissions, mixed budgets), both on
+    the same compiled step (continuous batching never retraces).
+  * dispatch — a spy on ``repro.kernels.ops.flash_decode_op`` counts
+    kernel entries while the step traces; zero means decode silently
+    fell off the Pallas path and the bench raises (CI runs this).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+
+class _DecodeDispatchSpy:
+    """Counts flash-decode kernel entries reached while tracing the
+    serve step (one per attention layer per compiled step)."""
+
+    def __init__(self):
+        self.count = 0
+
+    def __enter__(self):
+        from repro.kernels import ops as kops
+
+        self._kops = kops
+        self._orig = kops.flash_decode_op
+
+        def op(*a, **kw):
+            self.count += 1
+            return self._orig(*a, **kw)
+
+        kops.flash_decode_op = op
+        return self
+
+    def __exit__(self, *exc):
+        self._kops.flash_decode_op = self._orig
+        return False
+
+    def check(self):
+        if not self.count:
+            raise RuntimeError(
+                "paged decode never reached the flash_decode kernel — "
+                "dispatch regression (dense fallback?)")
+
+
+def _wave_static(eng, sess, rng, vocab, *, num_slots, prompt_len, budget):
+    hs = [sess.submit(rng.integers(0, vocab, (prompt_len,)),
+                      max_new_tokens=budget) for _ in range(num_slots)]
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(h.tokens) for h in hs)
+    return toks, dt
+
+
+def _wave_churn(eng, sess, rng, vocab, *, num_slots, prompt_len, budget):
+    budgets = [max(2, budget - 3 * (i % 4)) for i in range(2 * num_slots)]
+    pending = [(rng.integers(0, vocab, (prompt_len,)), b) for b in budgets]
+    hs = []
+    t0 = time.perf_counter()
+    while pending or eng.sched.has_work:
+        # drip-feed submissions so slots churn mid-flight
+        if pending:
+            p, b = pending.pop(0)
+            hs.append(sess.submit(p, max_new_tokens=b))
+        eng.step()
+    dt = time.perf_counter() - t0
+    toks = sum(len(h.tokens) for h in hs)
+    assert all(h.done for h in hs)
+    return toks, dt
+
+
+def run(arch: str = "qwen2.5-32b", *, num_slots: int = 4,
+        block_size: int = 8, prompt_len: int = 12, new_tokens: int = 32,
+        num_splits: int = 2, out_path: str | None = "BENCH_serve.json",
+        ) -> dict:
+    from repro.configs.registry import SMOKES
+    from repro.models import transformer as T
+    from repro.serve import PagedServeEngine, Session
+
+    cfg = SMOKES[arch]
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # pool sized for the workload but 2x oversubscribed vs worst case:
+    # equal capacity (num_slots x max_seq_len) with half the blocks
+    per_seq = -(-(prompt_len + new_tokens) // block_size)
+    max_blocks_per_seq = 2 * per_seq
+    num_blocks = num_slots * per_seq
+
+    with _DecodeDispatchSpy() as spy:
+        eng = PagedServeEngine(
+            cfg, params, block_size=block_size, num_blocks=num_blocks,
+            max_blocks_per_seq=max_blocks_per_seq, num_slots=num_slots,
+            max_prefill_len=prompt_len, prefill_chunk=prompt_len,
+            num_splits=num_splits)
+        sess = Session(eng, "bench")
+        # warmup wave: compiles prefill + decode step (traced under spy)
+        _wave_static(eng, sess, rng, cfg.vocab_size,
+                     num_slots=num_slots, prompt_len=prompt_len, budget=4)
+    spy.check()
+
+    toks_s, dt_s = _wave_static(eng, sess, rng, cfg.vocab_size,
+                                num_slots=num_slots, prompt_len=prompt_len,
+                                budget=new_tokens)
+    toks_c, dt_c = _wave_churn(eng, sess, rng, cfg.vocab_size,
+                               num_slots=num_slots, prompt_len=prompt_len,
+                               budget=new_tokens)
+
+    stats = eng.stats()
+    paged = stats["cache_bytes"]
+    dense = stats["dense_bytes_equivalent"]
+    if not paged < dense:
+        raise RuntimeError(
+            f"paged pool ({paged}B) not smaller than the equal-capacity "
+            f"dense cache ({dense}B) — paging memory claim broken")
+
+    result = {
+        "bench": "serve_decode",
+        "arch": arch,
+        "backend": jax.default_backend(),
+        "num_slots": num_slots,
+        "block_size": block_size,
+        "num_blocks": num_blocks,
+        "max_blocks_per_seq": max_blocks_per_seq,
+        "num_splits": num_splits,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "paged_cache_bytes": paged,
+        "dense_bytes_equivalent": dense,
+        "paged_over_dense": paged / dense,
+        "tok_s_static": toks_s / dt_s,
+        "tok_s_churn": toks_c / dt_c,
+        "decode_steps": stats["steps"],
+        "kernel_dispatch_count": spy.count,
+    }
+    print(f"[serve_decode] {arch} slots={num_slots} "
+          f"paged={paged / 1e6:.2f}MB dense-equiv={dense / 1e6:.2f}MB "
+          f"({result['paged_over_dense']:.2f}x)")
+    print(f"[serve_decode] static {result['tok_s_static']:.1f} tok/s, "
+          f"churn {result['tok_s_churn']:.1f} tok/s, "
+          f"kernel dispatches at trace = {spy.count}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[serve_decode] wrote {out_path}")
+    return result

@@ -1,10 +1,21 @@
-"""Batched serving example: prefill a batch of prompts, decode with the
-jit'd serve_step (the same function the decode-shape dry-run cells lower).
+"""Serving example: dense fixed-batch or paged continuous batching.
 
   PYTHONPATH=src python examples/serve_batch.py [--arch qwen2.5-32b]
+      [--engine paged|dense]
 
-Uses the reduced (smoke) config of the chosen assigned architecture so it
-runs on CPU; the full config is exercised via the dry-run.
+``--engine dense`` (any family): one prefill + jit'd decode steps over a
+dense cache, in-trace sampling, eos early exit.
+
+``--engine paged`` (attn / local / attn_moe families): the production
+path (DESIGN.md §12, docs/serving.md) — two tenant sessions submit
+staggered requests with different sampling params into a block-pool KV
+cache; the continuous-batching scheduler admits and retires them
+between jit'd flash-decode steps, one request streams token-by-token,
+another is cancelled mid-flight, and the pool stats are printed at the
+end.
+
+Uses the reduced (smoke) config of the chosen architecture so it runs
+on CPU; the full config is exercised via the dry-run.
 """
 import argparse
 import time
@@ -15,12 +26,92 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models import transformer as T
-from repro.serve.engine import ServeEngine
+from repro.serve import (PagedServeEngine, SamplingParams, ServeEngine,
+                         Session, paged_supported)
+
+
+def _prompt_batch(cfg, rng, batch, prompt_len):
+    batch_d = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+    if cfg.encoder_layers:
+        batch_d["frames"] = jnp.asarray(rng.standard_normal(
+            (batch, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.n_image_tokens:
+        batch_d["image_embeds"] = jnp.asarray(rng.standard_normal(
+            (batch, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
+    return batch_d
+
+
+def run_dense(cfg, params, args, rng):
+    eng = ServeEngine(cfg, params,
+                      max_len=args.prompt_len + args.new_tokens,
+                      temperature=args.temperature)
+    batch = _prompt_batch(cfg, rng, args.batch, args.prompt_len)
+    t0 = time.perf_counter()
+    out = eng.generate(batch, max_new_tokens=args.new_tokens)
+    dt = time.perf_counter() - t0
+    toks = out.shape[0] * out.shape[1]
+    print(f"arch={args.arch} (reduced) dense batch={args.batch}")
+    for i in range(args.batch):
+        print(f"  seq {i}: {np.asarray(out[i]).tolist()}")
+    print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s incl. "
+          "prefill+compile)")
+
+
+def run_paged(cfg, params, args, rng):
+    eng = PagedServeEngine(
+        cfg, params, block_size=8,
+        num_blocks=args.batch * 2
+        * -(-(args.prompt_len + args.new_tokens) // 8),
+        num_slots=args.batch, max_prefill_len=args.prompt_len,
+        prefill_chunk=8, num_splits=2)
+    tenant_a = Session(eng, "tenant-a")
+    tenant_b = Session(eng, "tenant-b", default_sampling=SamplingParams(
+        temperature=max(args.temperature, 0.7), top_k=50, top_p=0.95,
+        seed=1))
+
+    def prompt(n):
+        return rng.integers(0, cfg.vocab_size, (n,))
+
+    t0 = time.perf_counter()
+    # tenant A: greedy requests, one streamed token-by-token
+    streamed = tenant_a.submit(prompt(args.prompt_len),
+                               max_new_tokens=args.new_tokens)
+    rest = [tenant_a.submit(prompt(args.prompt_len - 2),
+                            max_new_tokens=args.new_tokens)]
+    # tenant B: sampled requests admitted mid-flight, one cancelled
+    eng.step()
+    rest.append(tenant_b.submit(prompt(args.prompt_len),
+                                max_new_tokens=args.new_tokens))
+    doomed = tenant_b.submit(prompt(args.prompt_len),
+                             max_new_tokens=4 * args.new_tokens)
+    print(f"arch={args.arch} (reduced) paged slots={args.batch}")
+    got = []
+    for tok in streamed.stream():
+        got.append(tok)
+        if len(got) == 3:
+            doomed.cancel()
+    print(f"  {streamed.request.request_id} (streamed): {got}")
+    eng.run()
+    for h in rest:
+        print(f"  {h.request.request_id} ({h.finish_reason}): {h.tokens}")
+    print(f"  {doomed.request.request_id}: {doomed.finish_reason} after "
+          f"{len(doomed.tokens)} tokens (blocks returned to pool)")
+    dt = time.perf_counter() - t0
+    stats = eng.stats()
+    toks = sum(len(h.tokens) for h in (streamed, doomed, *rest))
+    print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s incl. "
+          "prefill+compile)")
+    print(f"pool: {stats['used_blocks']}/{stats['num_blocks']} blocks used "
+          f"after drain, paged {stats['cache_bytes'] / 1e6:.2f}MB vs "
+          f"dense-equivalent {stats['dense_bytes_equivalent'] / 1e6:.2f}MB, "
+          f"{stats['steps']} decode steps")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-32b")
+    ap.add_argument("--engine", choices=["dense", "paged"], default="dense")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -29,29 +120,13 @@ def main():
 
     cfg = get_config(args.arch, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.new_tokens,
-                      temperature=args.temperature)
-
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)}
-    if cfg.encoder_layers:
-        batch["frames"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.encoder_seq, cfg.d_model)), jnp.float32)
-    if cfg.n_image_tokens:
-        batch["image_embeds"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.n_image_tokens, cfg.d_model)), jnp.float32)
-
-    t0 = time.perf_counter()
-    out = eng.generate(batch, max_new_tokens=args.new_tokens)
-    dt = time.perf_counter() - t0
-    toks = out.shape[0] * out.shape[1]
-    print(f"arch={args.arch} (reduced) batch={args.batch}")
-    for i in range(args.batch):
-        print(f"  seq {i}: {np.asarray(out[i]).tolist()}")
-    print(f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s incl. "
-          "prefill+compile)")
+    if args.engine == "paged":
+        if not paged_supported(cfg):
+            raise SystemExit(f"{args.arch} is not a paged family; "
+                             "use --engine dense")
+        run_paged(cfg, params, args, np.random.default_rng(0))
+    else:
+        run_dense(cfg, params, args, np.random.default_rng(0))
 
 
 if __name__ == "__main__":

@@ -9,6 +9,11 @@
   flash_attention  — online-softmax attention, GQA/causal/window, VMEM-
                      resident softmax state (the train/prefill memory-term
                      fix identified in EXPERIMENTS.md §Roofline)
+  flash_decode     — paged single-query decode attention: K/V gathered
+                     through the serve block table via scalar-prefetched
+                     index maps, split-KV parallel over cache blocks with
+                     an online-softmax merge (serve/kv_cache.py is the
+                     pool; DESIGN.md §12)
 
 dct_project / colgather_matmul / quant_ef accept leading stacked-layer axes
 (collapsed into a batch grid dimension), so the scan-stacked ``(layers, m,
@@ -22,11 +27,12 @@ from . import ops, ref
 from .colgather_matmul import colgather_matmul, colgather_matmul_dual
 from .dct_project import dct_project
 from .flash_attention import flash_attention
+from .flash_decode import flash_decode
 from .newton_schulz import newton_schulz_pallas, ns_iteration
 from .quant_ef import dequant_add_ef, quantize_ef
 
 __all__ = [
     "ops", "ref", "colgather_matmul", "colgather_matmul_dual", "dct_project",
-    "flash_attention", "newton_schulz_pallas", "ns_iteration",
+    "flash_attention", "flash_decode", "newton_schulz_pallas", "ns_iteration",
     "dequant_add_ef", "quantize_ef",
 ]

@@ -10,6 +10,7 @@ import jax
 from .colgather_matmul import colgather_matmul, colgather_matmul_dual
 from .dct_project import dct_project
 from .flash_attention import flash_attention
+from .flash_decode import flash_decode
 from .newton_schulz import newton_schulz_pallas, ns_iteration
 from .quant_ef import dequant_add_ef, quantize_ef
 
@@ -45,6 +46,11 @@ def ns_iteration_op(x, **kw):
 def flash_attention_op(q, k, v, **kw):
     kw.setdefault("interpret", _INTERPRET)
     return flash_attention(q, k, v, **kw)
+
+
+def flash_decode_op(q, k_pool, v_pool, block_table, lengths, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return flash_decode(q, k_pool, v_pool, block_table, lengths, **kw)
 
 
 def quantize_ef_op(x, **kw):

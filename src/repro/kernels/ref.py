@@ -60,6 +60,37 @@ def dequant_add_ef_ref(g: jax.Array, q: jax.Array, scale: jax.Array):
     return (g.astype(jnp.float32) + q.astype(jnp.float32) * scale).astype(g.dtype)
 
 
+def flash_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_table: jax.Array, lengths: jax.Array, *,
+                     window: int | None = None):
+    """Dense-attention oracle for the paged flash-decode kernel.
+
+    Gathers each slot's blocks into a dense (B, S, Hkv, hd) cache
+    through the block table, then runs plain fp32 masked softmax
+    attention. q: (B, Hq, hd); pools: (NB, bs, Hkv, hd); block_table:
+    (B, MAXB) int32; lengths: (B,). Returns (B, Hq, hd) in q.dtype.
+    """
+    b, hq, hd = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    group = hq // hkv
+    # densify: (B, MAXB, bs, Hkv, hd) -> (B, S, Hkv, hd)
+    k = jnp.take(k_pool, block_table, axis=0).reshape(b, -1, hkv, hd)
+    v = jnp.take(v_pool, block_table, axis=0).reshape(b, -1, hkv, hd)
+    s = k.shape[1]
+    qg = q.reshape(b, hkv, group, hd).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    pos = jnp.arange(s)[None, :]
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask &= pos >= (lengths[:, None] - window)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(mask[:, None, None, :], probs, 0.0)  # length-0 slots
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, hd).astype(q.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: int | None = None):
     """Plain softmax attention oracle. q: (B,S,Hq,hd); k,v: (B,S,Hkv,hd)."""

@@ -78,6 +78,18 @@ def rope_at(pos, head_dim: int, theta: float = 1e4):
     return jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
 
 
+def rope_tables_at(positions, head_dim: int, theta: float = 1e4,
+                   dtype=jnp.float32):
+    """``rope_table`` for a *traced* position vector (chunked prefill:
+    the chunk's absolute start is a runtime scalar, so the static
+    ``offset`` of ``rope_table`` can't express it). positions: (S,)
+    int32 -> ((S, half), (S, half)) for ``apply_rope``."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
 # ---------------------------------------------------------------------------
 # Blockwise (flash-style) causal attention — pure JAX online softmax.
 # Memory: O(S * chunk) instead of O(S^2); the fully-masked block pairs are
@@ -232,6 +244,31 @@ def decode_attention(q, k_cache, v_cache, *, length=None, window=None,
     out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, hq, -1).astype(q.dtype)
+
+
+def chunk_attention(q, k_cache, v_cache, mask, *, scale=None):
+    """Multi-token attention against a cache (chunked paged prefill).
+
+    q: (B, C, Hq, hd) — the prompt chunk's queries; k/v_cache:
+    (B, S, Hkv, hd) — the prefill scratch holding every position written
+    so far (including this chunk's); mask: (C, S) or (B, C, S) bool
+    validity (causal-with-offset, sliding window). Returns (B, C, Hq,
+    hd) in q.dtype. Same bf16-dot/fp32-accumulate discipline as
+    ``decode_attention``."""
+    b, c, hq, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, c, hkv, group, hd).astype(k_cache.dtype)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bckgd,bskd->bkcgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, :, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkcgs,bskd->bckgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, hq, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

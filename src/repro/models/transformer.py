@@ -31,6 +31,7 @@ from repro.parallel.sharding import shard
 from .layers import (
     apply_rope,
     blockwise_attention,
+    chunk_attention,
     decode_attention,
     dense_init,
     embed_init,
@@ -39,6 +40,7 @@ from .layers import (
     rms_norm,
     rope_at,
     rope_table,
+    rope_tables_at,
     sp_blockwise_attention,
     swiglu,
 )
@@ -587,7 +589,8 @@ def _rope_decode(x, cos, sin):
 
 
 def _gqa_decode(p, x_t, cache, pos, cfg, *, window=None):
-    """x_t: (B, d); cache {'k','v'}: (B, S|w, Hkv, hd). Returns (y, cache)."""
+    """x_t: (B, d); cache {'k','v'}: (B, S|w, Hkv, hd); pos: (B,) int32
+    per-sequence positions. Returns (y, cache)."""
     b, d = x_t.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
@@ -603,28 +606,27 @@ def _gqa_decode(p, x_t, cache, pos, cfg, *, window=None):
     if cfg.use_qk_norm:
         q = _qk_norm(q, p["q_norm_scale"])
         k = _qk_norm(k, p["k_norm_scale"])
-    posv = jnp.full((b,), pos, jnp.int32)
-    cos, sin = rope_at(posv, hd, cfg.rope_theta)   # (B, 1, half)
+    cos, sin = rope_at(pos, hd, cfg.rope_theta)    # (B, 1, half)
     q = _rope_decode(q, cos, sin)                  # broadcast over heads
     k = _rope_decode(k, cos, sin)
 
     s = cache["k"].shape[1]
     k = k.astype(cache["k"].dtype)
     v = v.astype(cache["v"].dtype)
+    rows = jnp.arange(b)
     if window is not None:
-        slot = pos % s
-        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, None], slot, 1)
-        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, None], slot, 1)
-        idx = jnp.arange(s)
-        entry_pos = pos - ((pos - idx) % s)
-        mask = (entry_pos >= 0) & (entry_pos >= pos - window + 1)
-        mask = jnp.broadcast_to(mask[None], (b, s))
+        slot = pos % s                             # per-row ring slot
+        new_k = cache["k"].at[rows, slot].set(k)
+        new_v = cache["v"].at[rows, slot].set(v)
+        idx = jnp.arange(s)[None, :]
+        posc = pos[:, None]
+        entry_pos = posc - ((posc - idx) % s)
+        mask = (entry_pos >= 0) & (entry_pos >= posc - window + 1)
         out = decode_attention(q, new_k, new_v, mask=mask)
     else:
-        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, None], pos, 1)
-        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, None], pos, 1)
-        length = jnp.full((b,), pos + 1, jnp.int32)
-        out = decode_attention(q, new_k, new_v, length=length)
+        new_k = cache["k"].at[rows, pos].set(k)
+        new_v = cache["v"].at[rows, pos].set(v)
+        out = decode_attention(q, new_k, new_v, length=pos + 1)
     y = out.reshape(b, hq * hd) @ p["wo"]["kernel"]
     if "bias" in p["wo"]:
         y = y + p["wo"]["bias"]
@@ -668,8 +670,7 @@ def _mla_decode(p, x_t, cache, pos, cfg):
     c_kv, k_rope = ckv[..., :kvr], ckv[..., kvr:]
     c_kv = rms_norm(c_kv, p["kv_norm_scale"])
 
-    posv = jnp.full((b,), pos, jnp.int32)
-    cos, sin = rope_at(posv, rope_d, cfg.rope_theta)
+    cos, sin = rope_at(pos, rope_d, cfg.rope_theta)
     q_rope = _rope_decode(q_rope, cos, sin)
     k_rope = _rope_decode(k_rope[:, None, :], cos, sin)[:, 0]
 
@@ -680,10 +681,11 @@ def _mla_decode(p, x_t, cache, pos, cfg):
     q_lat = jnp.einsum("bhn,khn->bhk", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))
 
-    new_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], c_kv[:, None].astype(cache["ckv"].dtype), pos, 1)
-    new_kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["krope"], k_rope[:, None].astype(cache["krope"].dtype), pos, 1)
+    rows = jnp.arange(b)
+    new_ckv = cache["ckv"].at[rows, pos].set(
+        c_kv.astype(cache["ckv"].dtype))
+    new_kr = cache["krope"].at[rows, pos].set(
+        k_rope.astype(cache["krope"].dtype))
 
     s = new_ckv.shape[1]
     cdt = new_ckv.dtype
@@ -693,7 +695,7 @@ def _mla_decode(p, x_t, cache, pos, cfg):
               + jnp.einsum("bhr,bsr->bhs", q_rope.astype(cdt), new_kr,
                            preferred_element_type=jnp.float32))
     scores = scores / math.sqrt(nope + rope_d)
-    mask = jnp.arange(s)[None] <= pos
+    mask = jnp.arange(s)[None] <= pos[:, None]
     scores = jnp.where(mask[:, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
     ctx_lat = jnp.einsum("bhs,bsk->bhk", probs, new_ckv,
@@ -704,7 +706,8 @@ def _mla_decode(p, x_t, cache, pos, cfg):
 
 
 def block_decode(kind: str, p, x_t, cache, pos, cfg):
-    """x_t: (B, d). Returns (x_t, new_cache_entry)."""
+    """x_t: (B, d); pos: (B,) int32 per-sequence positions. Returns
+    (x_t, new_cache_entry)."""
     if kind in ("attn", "local", "attn_moe"):
         h = rms_norm(x_t, p["ln1"]["scale"], cfg.norm_eps)
         window = cfg.sliding_window if kind == "local" else None
@@ -776,11 +779,27 @@ def block_decode(kind: str, p, x_t, cache, pos, cfg):
     raise ValueError(kind)
 
 
+def _lm_head(x_t, params, cfg):
+    """Final norm + unembedding shared by every decode entry point.
+    x_t: (..., d) -> logits (..., vocab)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        fn = params["final_norm"]
+        x_t = layer_norm(x_t, fn["scale"], fn["bias"], cfg.norm_eps)
+    else:
+        x_t = rms_norm(x_t, params["final_norm"]["scale"], cfg.norm_eps)
+    unemb = (params["embed"] if cfg.tie_embeddings else params["unembed"])
+    return x_t @ unemb["kernel"].astype(cdt).T
+
+
 def decode_step(params, cache, token, pos, cfg):
-    """token: (B,) int32; pos: scalar int32 position of this token.
-    Returns (logits (B, vocab), new_cache)."""
+    """token: (B,) int32; pos: scalar int32 or (B,) int32 per-sequence
+    positions of this token. Returns (logits (B, vocab), new_cache)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     params = cast_params(params, cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((token.shape[0],), pos, jnp.int32)
     x_t = params["embed"]["kernel"][token]
     x_t = shard(x_t, "batch", None)
 
@@ -800,14 +819,7 @@ def decode_step(params, cache, token, pos, cfg):
         x_t, new_seg = jax.lax.scan(body, x_t, (seg_p, seg_c))
         new_caches.append(new_seg)
 
-    if cfg.family == "encdec":
-        fn = params["final_norm"]
-        x_t = layer_norm(x_t, fn["scale"], fn["bias"], cfg.norm_eps)
-    else:
-        x_t = rms_norm(x_t, params["final_norm"]["scale"], cfg.norm_eps)
-    unemb = (params["embed"] if cfg.tie_embeddings else params["unembed"])
-    logits = x_t @ unemb["kernel"].astype(cdt).T
-    return logits, new_caches
+    return _lm_head(x_t, params, cfg), new_caches
 
 
 # ===========================================================================
@@ -881,3 +893,276 @@ def _prefill_entry(kind, kv, cfg, b, s, max_len, cdt, ctx):
                 "x_prev_cm": kv["x_prev_cm"].astype(cdt),
                 "wkv": kv["wkv"]}
     raise ValueError(f"no prefill cache layout for block kind {kind!r}")
+
+
+# ===========================================================================
+# Paged serving path (DESIGN.md §12)
+#
+# The dense decode cache above charges every slot for max_len tokens.
+# The serving engine replaces it with a global pool of fixed-size token
+# blocks (serve/kv_cache.py) addressed through per-slot block tables;
+# attention runs in the Pallas flash-decode kernel which gathers K/V
+# straight through the table. Three entry points:
+#
+#   init_paged_pools(cfg, NB, bs)                  zeroed per-layer pools
+#   prefill_chunk(params, scratch, tokens, ...)    one prompt chunk into a
+#                                                  dense prefill scratch
+#   write_prefill_to_pools(pools, scratch, ...)    scatter scratch -> blocks
+#   decode_step_paged(params, pools, ...)          one token for every slot
+#
+# Only pure-attention schedules (attn / local / attn_moe) have a paged
+# layout; recurrent-state families (Mamba, RWKV), MLA latents and
+# encoder-decoder keep the dense engine.
+# ===========================================================================
+PAGED_KINDS = ("attn", "local", "attn_moe")
+
+
+def paged_supported(cfg) -> bool:
+    """True when every block in ``cfg.schedule`` has a paged layout."""
+    return all(kind in PAGED_KINDS
+               for pattern, _ in cfg.schedule for kind in pattern)
+
+
+def _check_paged(cfg):
+    if not paged_supported(cfg):
+        bad = sorted({k for pattern, _ in cfg.schedule for k in pattern
+                      if k not in PAGED_KINDS})
+        raise ValueError(
+            f"paged serving supports kinds {PAGED_KINDS}; {cfg.name!r} "
+            f"has {bad} — use the dense ServeEngine for this family")
+
+
+def init_paged_pools(cfg, num_blocks: int, block_size: int) -> list:
+    """Zeroed paged K/V pools matching the segment/scan structure:
+    ``pools[seg]['p{j}'] = {'k','v': (R, NB, bs, Hkv, hd)}``. Block ids
+    are shared across layers — entry ``i`` of a block table addresses
+    block ``i`` of every layer's pool."""
+    _check_paged(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    pools = []
+    for pattern, repeats in cfg.schedule:
+        seg = {}
+        for j, kind in enumerate(pattern):
+            seg[f"p{j}"] = {
+                "k": jnp.zeros((repeats, num_blocks, block_size, hkv, hd),
+                               cdt),
+                "v": jnp.zeros((repeats, num_blocks, block_size, hkv, hd),
+                               cdt),
+            }
+        pools.append(seg)
+    return pools
+
+
+def init_prefill_scratch(cfg, max_prefill_len: int) -> list:
+    """Dense per-layer K/V scratch used while chunk-prefilling ONE
+    sequence; scattered into the paged pools afterwards. Unlike the
+    decode cache, ``local`` layers get the full length here (the window
+    is enforced by masks, not a ring buffer, so the scatter into blocks
+    stays position-indexed)."""
+    _check_paged(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    scratch = []
+    for pattern, repeats in cfg.schedule:
+        seg = {}
+        for j, kind in enumerate(pattern):
+            seg[f"p{j}"] = {
+                "k": jnp.zeros((repeats, 1, max_prefill_len, hkv, hd), cdt),
+                "v": jnp.zeros((repeats, 1, max_prefill_len, hkv, hd), cdt),
+            }
+        scratch.append(seg)
+    return scratch
+
+
+def _paged_ffn(kind, p, x_t, cfg):
+    """Post-attention half of a paged block: norm + SwiGLU or MoE.
+    x_t: (B, d) (decode) or (B, C, d) (prefill chunk)."""
+    h = rms_norm(x_t, p["ln2"]["scale"], cfg.norm_eps)
+    if kind == "attn_moe":
+        squeeze = h.ndim == 2
+        m, _ = moe_ffn(p["moe"], h[:, None, :] if squeeze else h, cfg)
+        return x_t + (m[:, 0] if squeeze else m)
+    m = swiglu(h, p["mlp"]["wg"]["kernel"], p["mlp"]["wu"]["kernel"],
+               p["mlp"]["wd"]["kernel"])
+    return x_t + m
+
+
+def _paged_gqa_decode(p, x_t, pool, block_table, pos, active, cfg, *,
+                      window, num_splits):
+    """One token of paged GQA attention. x_t: (B, d); pool {'k','v'}:
+    (NB, bs, Hkv, hd); block_table: (B, MAXB); pos/active: (B,). The
+    new K/V are scattered into each slot's current block (inactive
+    slots scatter out-of-range and are dropped), then the flash-decode
+    kernel attends through the table."""
+    from repro.kernels.ops import flash_decode_op
+
+    b, d = x_t.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    nb, bs = pool["k"].shape[0], pool["k"].shape[1]
+
+    def proj(w, t, h):
+        y = t @ w["kernel"]
+        if "bias" in w:
+            y = y + w["bias"]
+        return y.reshape(b, h, hd)
+
+    q = proj(p["wq"], x_t, hq)
+    k = proj(p["wk"], x_t, hkv)
+    v = proj(p["wv"], x_t, hkv)
+    if cfg.use_qk_norm:
+        q = _qk_norm(q, p["q_norm_scale"])
+        k = _qk_norm(k, p["k_norm_scale"])
+    cos, sin = rope_at(pos, hd, cfg.rope_theta)
+    q = _rope_decode(q, cos, sin)
+    k = _rope_decode(k, cos, sin)
+
+    rows = jnp.arange(b)
+    blk = block_table[rows, pos // bs]
+    dest = jnp.where(active, blk, nb)              # OOB -> dropped
+    off = pos % bs
+    new_k = pool["k"].at[dest, off].set(k.astype(pool["k"].dtype),
+                                        mode="drop")
+    new_v = pool["v"].at[dest, off].set(v.astype(pool["v"].dtype),
+                                        mode="drop")
+    lengths = jnp.where(active, pos + 1, 0)
+    out = flash_decode_op(q, new_k, new_v, block_table, lengths,
+                          window=window, num_splits=num_splits)
+    y = out.reshape(b, hq * hd) @ p["wo"]["kernel"]
+    if "bias" in p["wo"]:
+        y = y + p["wo"]["bias"]
+    return y, {"k": new_k, "v": new_v}
+
+
+def decode_step_paged(params, pools, token, pos, block_table, active, cfg,
+                      *, num_splits: int = 1):
+    """One decode token for every scheduler slot against the paged pools.
+
+    token/pos/active: (B,) — per-slot lanes (B = slot capacity, fixed);
+    block_table: (B, MAXB) int32. Inactive slots cost compute but write
+    nothing and read length-0 caches (zero attention output), so batch
+    composition can churn without retracing. Returns (logits (B, vocab),
+    new_pools)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    params = cast_params(params, cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    active = jnp.asarray(active, bool)
+    x_t = params["embed"]["kernel"][token]
+
+    new_pools = []
+    for (pattern, repeats), seg_p, seg_pool in zip(
+            cfg.schedule, params["segments"], pools):
+
+        def body(x_t, sc):
+            layer_p, layer_pool = sc
+            new_entries = {}
+            for j, kind in enumerate(pattern):
+                p, pool = layer_p[f"p{j}"], layer_pool[f"p{j}"]
+                window = cfg.sliding_window if kind == "local" else None
+                h = rms_norm(x_t, p["ln1"]["scale"], cfg.norm_eps)
+                a, new_entries[f"p{j}"] = _paged_gqa_decode(
+                    p["attn"], h, pool, block_table, pos, active, cfg,
+                    window=window, num_splits=num_splits)
+                x_t = _paged_ffn(kind, p, x_t + a, cfg).astype(cdt)
+            return x_t, new_entries
+
+        x_t, new_seg = jax.lax.scan(body, x_t, (seg_p, seg_pool))
+        new_pools.append(new_seg)
+
+    return _lm_head(x_t, params, cfg), new_pools
+
+
+def prefill_chunk(params, scratch, tokens, start, take_idx, cfg):
+    """Run one prompt chunk through the model, extending the prefill
+    scratch. tokens: (1, C) (right-padded garbage is fine — causal
+    masking keeps it out of valid positions); start: scalar int32
+    absolute position of tokens[:, 0]; take_idx: scalar int32 chunk-
+    local index whose logits to return (the prompt's last token on the
+    final chunk; ignored otherwise). Returns (logits (1, vocab),
+    new_scratch)."""
+    _check_paged(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    params = cast_params(params, cfg)
+    b, c = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    x = params["embed"]["kernel"][tokens]          # (1, C, d)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def attn_chunk(p, h, scr, window):
+        q = (h @ p["wq"]["kernel"])
+        k = (h @ p["wk"]["kernel"])
+        v = (h @ p["wv"]["kernel"])
+        if "bias" in p["wq"]:
+            q, k, v = (q + p["wq"]["bias"], k + p["wk"]["bias"],
+                       v + p["wv"]["bias"])
+        q = q.reshape(b, c, cfg.n_heads, hd)
+        k = k.reshape(b, c, hkv, hd)
+        v = v.reshape(b, c, hkv, hd)
+        if cfg.use_qk_norm:
+            q = _qk_norm(q, p["q_norm_scale"])
+            k = _qk_norm(k, p["k_norm_scale"])
+        qpos = start + jnp.arange(c, dtype=jnp.int32)
+        cos, sin = rope_tables_at(qpos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        new_k = jax.lax.dynamic_update_slice(
+            scr["k"], k.astype(scr["k"].dtype), (0, start, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            scr["v"], v.astype(scr["v"].dtype), (0, start, 0, 0))
+        s = scr["k"].shape[1]
+        kpos = jnp.arange(s, dtype=jnp.int32)[None, :]
+        mask = kpos <= qpos[:, None]               # causal w/ offset
+        if window is not None:
+            mask &= kpos >= qpos[:, None] - window + 1
+        out = chunk_attention(q, new_k, new_v, mask)
+        y = out.reshape(b, c, cfg.n_heads * hd) @ p["wo"]["kernel"]
+        if "bias" in p["wo"]:
+            y = y + p["wo"]["bias"]
+        return y, {"k": new_k, "v": new_v}
+
+    new_scratch = []
+    for (pattern, repeats), seg_p, seg_scr in zip(
+            cfg.schedule, params["segments"], scratch):
+
+        def body(x, sc):
+            layer_p, layer_scr = sc
+            new_entries = {}
+            for j, kind in enumerate(pattern):
+                p = layer_p[f"p{j}"]
+                window = cfg.sliding_window if kind == "local" else None
+                h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+                a, new_entries[f"p{j}"] = attn_chunk(
+                    p["attn"], h, layer_scr[f"p{j}"], window)
+                x = _paged_ffn(kind, p, x + a, cfg).astype(cdt)
+            return x, new_entries
+
+        x, new_seg = jax.lax.scan(body, x, (seg_p, seg_scr))
+        new_scratch.append(new_seg)
+
+    take_idx = jnp.asarray(take_idx, jnp.int32)
+    x_last = jnp.take_along_axis(x, take_idx.reshape(1, 1, 1), axis=1)[:, 0]
+    return _lm_head(x_last, params, cfg), new_scratch
+
+
+def write_prefill_to_pools(pools, scratch, block_ids, length,
+                           block_size: int):
+    """Scatter a finished prefill scratch into the paged pools.
+
+    block_ids: (MAXB,) int32 — the sequence's block table (padded);
+    length: scalar int32 valid tokens. Whole blocks are written (the
+    tail of the last block holds garbage that stays masked by
+    ``length``); entries past ``ceil(length / bs)`` scatter out of
+    range and are dropped."""
+    length = jnp.asarray(length, jnp.int32)
+    nblocks = (length + block_size - 1) // block_size
+
+    def write(pool, scr):
+        r, nb_pool, bs = pool.shape[0], pool.shape[1], pool.shape[2]
+        s = scr.shape[2]
+        ncols = s // bs
+        blocks = scr.reshape(r, ncols, bs, *scr.shape[3:])
+        dest = jnp.where(jnp.arange(ncols) < nblocks,
+                         block_ids[:ncols].astype(jnp.int32), nb_pool)
+        return pool.at[:, dest].set(blocks.astype(pool.dtype), mode="drop")
+
+    return jax.tree.map(write, pools, scratch)

@@ -1,3 +1,14 @@
-from .engine import ServeEngine, make_serve_step
+from .engine import PagedServeEngine, ServeEngine, make_serve_step
+from .kv_cache import (BlockAllocator, OutOfBlocksError, PagedCacheConfig,
+                       PagedKVCache, blocks_for, paged_supported)
+from .scheduler import Scheduler, SlotLanes
+from .session import (GenerationHandle, Request, SamplingParams, Session,
+                      sample_tokens)
 
-__all__ = ["ServeEngine", "make_serve_step"]
+__all__ = [
+    "ServeEngine", "PagedServeEngine", "make_serve_step",
+    "BlockAllocator", "OutOfBlocksError", "PagedCacheConfig", "PagedKVCache",
+    "blocks_for", "paged_supported", "Scheduler", "SlotLanes",
+    "GenerationHandle", "Request", "SamplingParams", "Session",
+    "sample_tokens",
+]

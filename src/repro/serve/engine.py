@@ -1,28 +1,88 @@
-"""Batched serving: prefill + jit'd decode steps over a shared KV cache.
+"""Serving engines: fixed-batch dense and continuous-batching paged.
 
 ``make_serve_step`` is the function the decode-shape dry-run cells lower:
 one new token for every sequence in the batch against a ``seq_len``-sized
-cache (exactly the brief's ``decode_*`` contract). ``ServeEngine`` is the
-runnable wrapper used by examples/serve_batch.py: greedy or temperature
-sampling, synchronized positions, eos early-exit mask.
+cache (exactly the brief's ``decode_*`` contract).
+
+``ServeEngine`` is the fixed-batch dense engine (all families): one
+prefill, then jit'd decode steps. Sampling, eos detection and
+done-masking all run in-trace; the host reads back one small
+``(tokens, done)`` pair per step — needed anyway to stream tokens and
+stop early — instead of the seed's per-token host sampling loop.
+Positions are a per-sequence ``(B,)`` lane end to end.
+
+``PagedServeEngine`` is the production path for the paged families
+(DESIGN.md §12): block-pool KV cache (serve/kv_cache.py), chunked
+prefill into the pools, a continuous-batching scheduler
+(serve/scheduler.py) admitting and retiring requests between jit'd
+decode steps, per-sequence sampling lanes (serve/session.py), and the
+Pallas flash-decode kernel reading K/V through the block table. One
+compiled step serves arbitrary admit/retire churn; a sequence's output
+depends only on its own prompt, seed and budget, never on its
+neighbours.
 """
 from __future__ import annotations
 
-from typing import Any
+import math
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
 
+from .kv_cache import PagedCacheConfig, PagedKVCache
+from .scheduler import Scheduler
+from .session import (GenerationHandle, Request, SamplingParams, fold_keys,
+                      sample_tokens)
+
 
 def make_serve_step(cfg):
-    """(params, cache, token (B,), pos ()) -> (logits (B,V), cache)."""
+    """(params, cache, token (B,), pos () or (B,)) -> (logits (B,V), cache)."""
 
     def serve_step(params, cache, token, pos):
         return T.decode_step(params, cache, token, pos, cfg)
 
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# dense fixed-batch engine
+# ---------------------------------------------------------------------------
+def _dense_sample(logits, key, temperature):
+    """Shared-key batch sampling for the dense engine (temperature is a
+    static engine-level float here, matching the seed API)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def _make_dense_gen_step(cfg, temperature):
+    """decode + sample + eos/done masking, all in one trace. ``eos`` is a
+    traced scalar (-1 = no eos) so toggling it never retraces."""
+
+    def step(params, cache, token, pos, done, key, eos):
+        logits, cache = T.decode_step(params, cache, token, pos, cfg)
+        key, sub = jax.random.split(key)
+        tok = _dense_sample(logits, sub, temperature)
+        has_eos = eos >= 0
+        done = done | (has_eos & (tok == eos))
+        tok = jnp.where(done & has_eos, eos, tok)
+        return cache, tok, pos + 1, done, key
+
+    return step
+
+
+def _make_dense_first(temperature):
+    def first(logits, key, eos):
+        key, sub = jax.random.split(key)
+        tok = _dense_sample(logits, sub, temperature)
+        done = (eos >= 0) & (tok == eos)
+        return tok, done, key
+
+    return first
 
 
 class ServeEngine:
@@ -33,37 +93,246 @@ class ServeEngine:
         self.max_len = max_len
         self.temperature = temperature
         self._step = jax.jit(make_serve_step(cfg))
+        self._gen_step = jax.jit(_make_dense_gen_step(cfg, temperature))
+        self._first = jax.jit(_make_dense_first(temperature))
         self._key = jax.random.PRNGKey(seed)
-
-    def _sample(self, logits):
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._key, sub = jax.random.split(self._key)
-        return jax.random.categorical(
-            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
 
     def generate(self, batch: dict, *, max_new_tokens: int = 32,
                  eos_id: int | None = None):
         """batch: {'tokens': (B, S) prompt, + modality stubs}. Returns
-        (B, <=max_new_tokens) int32 generations (greedy/temperature)."""
+        (B, <=max_new_tokens) int32 generations (greedy/temperature).
+        Sampling and done-masking run in-trace; the host syncs once per
+        step on the small (token, done) pair to stream and early-exit."""
         prompt = batch["tokens"]
         b, s = prompt.shape
-        last_logits, cache, n = T.prefill(self.params, batch, self.cfg,
+        eos = jnp.int32(-1 if eos_id is None else eos_id)
+        last_logits, cache, _ = T.prefill(self.params, batch, self.cfg,
                                           max_len=self.max_len)
-        token = self._sample(last_logits)
+        token, done, self._key = self._first(last_logits, self._key, eos)
         out = [token]
-        done = jnp.zeros((b,), bool) if eos_id is not None else None
-        pos = s
+        pos = jnp.full((b,), s, jnp.int32)
         for _ in range(max_new_tokens - 1):
-            logits, cache = self._step(self.params, cache, token,
-                                       jnp.int32(pos))
-            token = self._sample(logits)
-            if eos_id is not None:
-                done = done | (token == eos_id)
-                token = jnp.where(done, eos_id, token)
-                if bool(done.all()):
-                    out.append(token)
-                    break
+            if eos_id is not None and bool(done.all()):
+                break
+            cache, token, pos, done, self._key = self._gen_step(
+                self.params, cache, token, pos, done, self._key, eos)
             out.append(token)
-            pos += 1
         return jnp.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# paged continuous-batching engine
+# ---------------------------------------------------------------------------
+def _make_paged_step(cfg, num_splits):
+    """One continuous-batching decode step, fully in-trace: paged
+    attention over the block table, per-slot sampling with position-
+    folded key lanes, eos hit detection and inactive-row masking. The
+    host reads back only the (tokens, eos_hit) lanes."""
+
+    def step(params, pools, token, pos, table, active, keys, temp, top_k,
+             top_p, eos):
+        logits, pools = T.decode_step_paged(
+            params, pools, token, pos, table, active, cfg,
+            num_splits=num_splits)
+        step_keys = fold_keys(keys, pos)
+        tok = sample_tokens(logits, step_keys, temp, top_k, top_p)
+        hit = active & (eos >= 0) & (tok == eos)
+        tok = jnp.where(active, tok, 0)
+        return pools, logits, tok, hit
+
+    return step
+
+
+def _make_paged_first():
+    """Sample the first token of one request from its prefill logits,
+    with the same key-folding scheme the decode step uses (folded at
+    the last prompt position), so the whole sample stream is a pure
+    function of (seed, position)."""
+
+    def first(logits, key, pos, temp, top_k, top_p, eos):
+        keys = fold_keys(key[None], pos[None])
+        tok = sample_tokens(logits, keys, temp[None], top_k[None],
+                            top_p[None])[0]
+        hit = (eos >= 0) & (tok == eos)
+        return tok, hit
+
+    return first
+
+
+class PagedServeEngine:
+    """Continuous-batching serving over a paged KV cache.
+
+    Submit :class:`~repro.serve.session.Request` objects (usually via a
+    :class:`~repro.serve.session.Session`); call :meth:`step` to advance
+    every running sequence by one token (admitting queued requests and
+    retiring finished ones at the boundary), or :meth:`run` to drain.
+    ``num_slots`` fixes the decode batch width; ``block_size`` /
+    ``num_blocks`` size the cache pool; admission reserves a request's
+    worst-case blocks up front, so backpressure is a queue, never a
+    mid-stream failure.
+    """
+
+    def __init__(self, cfg, params, *, block_size: int = 16,
+                 num_blocks: int = 256, max_blocks_per_seq: int | None = None,
+                 num_slots: int = 4, max_prefill_len: int | None = None,
+                 prefill_chunk: int = 16, num_splits: int = 1):
+        self.cfg = cfg
+        self.params = params
+        mbs = max_blocks_per_seq if max_blocks_per_seq is not None \
+            else num_blocks
+        self.cache_cfg = PagedCacheConfig(
+            block_size=block_size, num_blocks=num_blocks,
+            max_blocks_per_seq=mbs)
+        # raises for families the paged path does not serve
+        self.cache = PagedKVCache(cfg, self.cache_cfg, num_slots)
+        self.sched = Scheduler(num_slots, self.cache.allocator,
+                               max_blocks_per_seq=mbs)
+        self.prefill_chunk = prefill_chunk
+        mpl = max_prefill_len if max_prefill_len is not None \
+            else self.cache_cfg.max_seq_len
+        # the scratch length must tile both the fixed-width prefill chunk
+        # and the pool blocks (the final scatter reshapes into blocks)
+        tile = math.lcm(prefill_chunk, block_size)
+        self.max_prefill_len = -(-mpl // tile) * tile
+        self.scratch = T.init_prefill_scratch(cfg, self.max_prefill_len)
+
+        self.handles: dict[str, GenerationHandle] = {}
+        self._cancelled: set[str] = set()
+        self.steps = 0
+
+        self._decode = jax.jit(_make_paged_step(cfg, num_splits))
+        self._first = jax.jit(_make_paged_first())
+        self._prefill = jax.jit(
+            lambda p, scratch, toks, start, take:
+            T.prefill_chunk(p, scratch, toks, start, take, cfg))
+        self._write = jax.jit(
+            lambda pools, scratch, ids, length:
+            T.write_prefill_to_pools(pools, scratch, ids, length,
+                                     block_size))
+
+    # -- submission API ----------------------------------------------------
+    def submit(self, req: Request,
+               on_token: Optional[Callable] = None) -> GenerationHandle:
+        if req.request_id in self.handles:
+            raise ValueError(f"duplicate request id {req.request_id!r}")
+        if len(req.prompt) > self.max_prefill_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds "
+                f"max_prefill_len={self.max_prefill_len}")
+        self.sched.enqueue(req)           # validates the block budget
+        handle = GenerationHandle(req, self, on_token=on_token)
+        self.handles[req.request_id] = handle
+        return handle
+
+    def cancel(self, request_id: str) -> None:
+        """Mark a request for cancellation; it is dropped (queued) or
+        retired with its blocks freed (running) at the next step
+        boundary."""
+        if request_id in self.handles and \
+                not self.handles[request_id].done:
+            self._cancelled.add(request_id)
+
+    # -- internals ---------------------------------------------------------
+    def _retire(self, slot: int, reason: str) -> None:
+        req = self.sched.retire(slot)
+        self.cache.clear_slot(slot)
+        self.handles[req.request_id]._finish(reason)
+
+    def _process_cancellations(self) -> None:
+        for rid in list(self._cancelled):
+            self._cancelled.discard(rid)
+            if self.sched.drop_pending(rid):
+                self.handles[rid]._finish("cancelled")
+                continue
+            slot = self.sched.slot_of(rid)
+            if slot is not None:
+                self._retire(slot, "cancelled")
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Chunked prefill into the dense scratch, whole-block scatter
+        into the pools, then sample the request's first token."""
+        s = len(req.prompt)
+        c = self.prefill_chunk
+        padded = np.zeros((1, self.max_prefill_len), np.int32)
+        padded[0, :s] = req.prompt
+        last = None
+        for start in range(0, s, c):
+            take = max(min(s - 1 - start, c - 1), 0)
+            logits, self.scratch = self._prefill(
+                self.params, self.scratch,
+                jnp.asarray(padded[:, start:start + c]),
+                jnp.int32(start), jnp.int32(take))
+            if start <= s - 1 < start + c:
+                last = logits
+
+        ids = np.zeros((self.cache_cfg.max_blocks_per_seq,), np.int32)
+        table = self.sched.allocator.table(req.request_id)
+        ids[:len(table)] = table
+        self.cache.pools = self._write(self.cache.pools, self.scratch,
+                                       jnp.asarray(ids), jnp.int32(s))
+        self.cache.bind_slot(slot, req.request_id)
+
+        lanes = self.sched.lanes
+        tok, hit = self._first(
+            last, jnp.asarray(lanes.key[slot]), jnp.int32(s - 1),
+            jnp.float32(lanes.temperature[slot]),
+            jnp.int32(lanes.top_k[slot]), jnp.float32(lanes.top_p[slot]),
+            jnp.int32(lanes.eos[slot]))
+        tok_i = int(tok)
+        self.handles[req.request_id]._emit(tok_i)
+        n = self.sched.note_token(slot)
+        if bool(hit):
+            self._retire(slot, "eos")
+        elif n >= req.max_new_tokens:
+            self._retire(slot, "length")
+        else:
+            lanes.token[slot] = tok_i
+            lanes.pos[slot] = s
+
+    def step(self) -> bool:
+        """Advance every running sequence by one token. Admissions and
+        retirements happen at this boundary; the compiled decode step
+        never retraces. Returns True while work remains."""
+        self._process_cancellations()
+        for slot, req in self.sched.admit_ready():
+            self._admit(slot, req)
+        if not self.sched.running:
+            return self.sched.has_work
+
+        lanes = self.sched.lanes
+        pools, logits, tok, hit = self._decode(
+            self.params, self.cache.pools, jnp.asarray(lanes.token),
+            jnp.asarray(lanes.pos), self.cache.block_table(),
+            jnp.asarray(lanes.active), jnp.asarray(lanes.key),
+            jnp.asarray(lanes.temperature), jnp.asarray(lanes.top_k),
+            jnp.asarray(lanes.top_p), jnp.asarray(lanes.eos))
+        self.cache.pools = pools
+        self.last_logits = logits       # device array; tests/debug only
+        self.steps += 1
+        # the single host sync of the step: the streamed tokens + eos hits
+        tok_h = np.asarray(tok)
+        hit_h = np.asarray(hit)
+        for slot in sorted(self.sched.running):
+            req = self.sched.running[slot]
+            t = int(tok_h[slot])
+            self.handles[req.request_id]._emit(t)
+            n = self.sched.note_token(slot)
+            lanes.token[slot] = t
+            lanes.pos[slot] += 1
+            if hit_h[slot]:
+                self._retire(slot, "eos")
+            elif n >= req.max_new_tokens:
+                self._retire(slot, "length")
+        return self.sched.has_work
+
+    def run(self) -> None:
+        """Drain the queue: step until every request has finished."""
+        while self.step():
+            pass
+
+    def stats(self) -> dict:
+        s = self.cache.stats()
+        s["pending"] = len(self.sched.pending)
+        s["running"] = len(self.sched.running)
+        s["steps"] = self.steps
+        return s

@@ -1,0 +1,118 @@
+"""Block allocator + paged-cache unit tests (pure host logic)."""
+import numpy as np
+import pytest
+
+from repro.serve.kv_cache import (BlockAllocator, OutOfBlocksError,
+                                  blocks_for)
+
+
+def test_blocks_for():
+    assert blocks_for(0, 8) == 0
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+
+
+def test_alloc_free_roundtrip():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    t = a.alloc("a", 10)            # 3 blocks
+    assert len(t) == 3 and a.free_blocks == 5
+    assert a.length("a") == 10
+    assert a.free("a") == 3
+    assert a.free_blocks == 8
+
+
+def test_block_reuse_after_free_is_fifo():
+    """Freed blocks go to the tail; reuse order is deterministic."""
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    t1 = a.alloc("a", 8)            # blocks [0, 1]
+    t2 = a.alloc("b", 8)            # blocks [2, 3]
+    assert t1 == [0, 1] and t2 == [2, 3]
+    a.free("a")                     # free list: [0, 1]
+    t3 = a.alloc("c", 8)
+    assert t3 == [0, 1]             # a's blocks, in order
+    a.free("b")
+    a.free("c")
+    t4 = a.alloc("d", 16)
+    assert t4 == [2, 3, 0, 1]       # FIFO through both frees
+
+
+def test_out_of_blocks_raises_and_can_alloc_guards():
+    a = BlockAllocator(num_blocks=2, block_size=4)
+    a.alloc("a", 8)
+    assert not a.can_alloc(1)
+    with pytest.raises(OutOfBlocksError):
+        a.alloc("b", 1)
+    # the failed alloc must not leak partial state
+    assert a.free_blocks == 0 and "b" not in a._tables
+    a.free("a")
+    assert a.can_alloc(8)
+
+
+def test_extend_grows_and_backpressures():
+    a = BlockAllocator(num_blocks=3, block_size=4)
+    a.alloc("a", 4)
+    fresh = a.extend("a", 9)        # 1 -> 3 blocks
+    assert len(fresh) == 2 and a.length("a") == 9
+    assert a.extend("a", 10) == []  # fits in the tail block
+    with pytest.raises(OutOfBlocksError):
+        a.extend("a", 13)
+    # the failed extend must not leak partial state
+    assert a.free_blocks == 0 and len(a.table("a")) == 3
+
+
+def test_double_alloc_rejected():
+    a = BlockAllocator(num_blocks=4, block_size=4)
+    a.alloc("a", 4)
+    with pytest.raises(ValueError):
+        a.alloc("a", 4)
+
+
+def test_stats_utilization_fragmentation():
+    a = BlockAllocator(num_blocks=8, block_size=8)
+    a.alloc("a", 9)                 # 2 blocks for 9 tokens
+    s = a.stats()
+    assert s["used_blocks"] == 2 and s["free_blocks"] == 6
+    assert s["held_tokens"] == 9
+    assert s["utilization"] == pytest.approx(9 / 16)
+    assert s["fragmentation"] == pytest.approx(1 - 9 / 16)
+    a.free("a")
+    s = a.stats()
+    assert s["utilization"] == 0.0 and s["fragmentation"] == 0.0
+
+
+def test_paged_cache_table_and_sizing():
+    import jax
+    from repro.configs.registry import SMOKES
+    from repro.serve.kv_cache import PagedCacheConfig, PagedKVCache
+
+    cfg = SMOKES["qwen2.5-32b"]
+    cc = PagedCacheConfig(block_size=4, num_blocks=16, max_blocks_per_seq=4)
+    cache = PagedKVCache(cfg, cc, num_slots=2)
+    # pools mirror the schedule segments with a leading repeats axis
+    for leaf in jax.tree.leaves(cache.pools):
+        assert leaf.shape[1:3] == (16, 4)
+    cache.allocator.alloc("r", 6)
+    cache.bind_slot(1, "r")
+    tab = np.asarray(cache.block_table())
+    assert tab.shape == (2, 4)
+    assert (tab[0] == 0).all()
+    assert (tab[1, :2] == cache.allocator.table("r")).all()
+    cache.clear_slot(1)
+    assert (np.asarray(cache.block_table()) == 0).all()
+    # the paged pool is strictly smaller than a dense cache of the same
+    # (num_slots, max_seq_len) capacity whenever num_blocks < slots * maxb
+    assert cache.cache_bytes() < cache.dense_bytes_equivalent() * (
+        cc.num_blocks / (2 * cc.max_blocks_per_seq)) * 1.01
+
+
+def test_paged_cache_rejects_unpaged_families():
+    from repro.configs.registry import SMOKES
+    from repro.serve.kv_cache import (PagedCacheConfig, PagedKVCache,
+                                      paged_supported)
+
+    cfg = SMOKES["deepseek-v3-671b"]          # MLA latents: dense path only
+    assert not paged_supported(cfg)
+    cc = PagedCacheConfig(block_size=4, num_blocks=8, max_blocks_per_seq=2)
+    with pytest.raises(ValueError, match="paged"):
+        PagedKVCache(cfg, cc, num_slots=1)
