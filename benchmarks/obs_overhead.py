@@ -1,0 +1,255 @@
+"""Observability overhead gate -> BENCH_obs_overhead.json.
+
+The obs layer (src/repro/obs/, DESIGN.md §13) rides the hot paths of
+both production loops: every serving step touches histograms, counters
+and gauges in ``PagedServeEngine.step``, and every train step crosses
+the phase spans + histograms in ``Trainer.run``. The deal it makes is
+"one attribute test when disabled, cheap tuple-keyed dict updates when
+enabled" — this benchmark holds it to that deal with hard gates:
+
+  * serving: churn-wave decode throughput (tok/s) with obs **enabled**
+    may be at most ``serve_threshold`` (default 2 %) below disabled;
+  * training: wall per train-loop step with obs **enabled** may be at
+    most ``train_threshold`` (default 1 %) above disabled.
+
+Methodology is the repo's established overhead-gate recipe
+(benchmarks/resilience_overhead.py), tightened for host-loop noise:
+everything compiles up front, the two variants of every round run
+back-to-back with alternating order (off,on / on,off / ...) so slow
+machine-load drift cancels inside each round, and the serving gate
+reads the **median paired ratio** across rounds (the train gate keeps
+the min estimator — its waves are longer and quieter). The same engine
+/ same jitted step serves both variants — toggling obs is a host-side
+flag flip, and a sanity check asserts the flip is real: metric counts
+must grow during enabled waves and stay frozen during disabled ones.
+
+  PYTHONPATH=src python -m benchmarks.obs_overhead \
+      [--waves 4] [--serve-threshold 0.02] [--train-threshold 0.01]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import obs
+
+
+# ---------------------------------------------------------------------------
+# serving side
+# ---------------------------------------------------------------------------
+def _churn_wave(eng, sess, rng, vocab, *, num_slots, prompt_len, budget):
+    """One admit/retire churn wave (drip-fed submissions, mixed budgets);
+    returns (tokens, seconds)."""
+    budgets = [max(2, budget - 3 * (i % 4)) for i in range(2 * num_slots)]
+    pending = [(rng.integers(0, vocab, (prompt_len,)), b) for b in budgets]
+    hs = []
+    t0 = time.perf_counter()
+    while pending or eng.sched.has_work:
+        if pending:
+            p, b = pending.pop(0)
+            hs.append(sess.submit(p, max_new_tokens=b))
+        eng.step()
+    dt = time.perf_counter() - t0
+    assert all(h.done for h in hs)
+    return sum(len(h.tokens) for h in hs), dt
+
+
+def bench_serve(*, arch: str = "qwen2.5-32b", num_slots: int = 4,
+                block_size: int = 8, prompt_len: int = 12,
+                new_tokens: int = 16, waves: int = 4) -> dict:
+    from repro.configs.registry import SMOKES
+    from repro.models import transformer as T
+    from repro.serve import PagedServeEngine, Session
+
+    cfg = SMOKES[arch]
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    per_seq = -(-(prompt_len + new_tokens) // block_size)
+    eng = PagedServeEngine(
+        cfg, params, block_size=block_size,
+        num_blocks=num_slots * per_seq, max_blocks_per_seq=2 * per_seq,
+        num_slots=num_slots, max_prefill_len=prompt_len,
+        prefill_chunk=prompt_len, num_splits=2)
+    sess = Session(eng, "obsbench")
+
+    obs.disable()
+    _churn_wave(eng, sess, rng, cfg.vocab_size, num_slots=num_slots,
+                prompt_len=prompt_len, budget=4)        # compile warmup
+
+    tok_s: dict[str, list[float]] = {"off": [], "on": []}
+    reg = obs.registry()
+
+    def one(label: str) -> None:
+        if label == "on":
+            obs.enable()
+        before = reg.get("serve_tokens_total").value()
+        toks, dt = _churn_wave(eng, sess, rng, cfg.vocab_size,
+                               num_slots=num_slots, prompt_len=prompt_len,
+                               budget=new_tokens)
+        grew = reg.get("serve_tokens_total").value() - before
+        if label == "on":
+            obs.disable()
+            if grew != toks:
+                raise RuntimeError(
+                    f"obs-on wave emitted {toks} tokens but the counter "
+                    f"grew by {grew} — serving instrumentation is not live")
+        elif grew:
+            raise RuntimeError(
+                f"obs-off wave still grew serve_tokens_total by {grew} — "
+                f"the disabled fast path is not a no-op")
+        tok_s[label].append(toks / dt)
+
+    # paired rounds with alternating order: the two variants of a round
+    # run back-to-back, so slow machine-load drift cancels inside the
+    # per-round ratio; the gate reads the median ratio across rounds
+    for r in range(waves):
+        for label in (("off", "on") if r % 2 == 0 else ("on", "off")):
+            one(label)
+    ratios = sorted(on / off
+                    for off, on in zip(tok_s["off"], tok_s["on"]))
+    return {
+        "arch": arch,
+        "num_slots": num_slots,
+        "new_tokens": new_tokens,
+        "waves_per_variant": waves,
+        "tok_s_off": tok_s["off"],
+        "tok_s_on": tok_s["on"],
+        "tok_s_off_best": max(tok_s["off"]),
+        "tok_s_on_best": max(tok_s["on"]),
+        "paired_on_over_off": ratios,
+        "paired_on_over_off_median": ratios[len(ratios) // 2],
+    }
+
+
+# ---------------------------------------------------------------------------
+# training side
+# ---------------------------------------------------------------------------
+def bench_train(*, steps_per_wave: int = 25, waves: int = 4,
+                seq: int = 32, batch: int = 4) -> dict:
+    from benchmarks.common import tiny_llama
+    from repro.data.synthetic import SyntheticLM
+    from repro.models import transformer as T
+    from repro.optim.api import get_optimizer
+    from repro.train.loop import Trainer
+    from repro.train.steps import TrainState, make_train_step
+
+    cfg = tiny_llama(d=64, layers=2, heads=2, d_ff=172, vocab=256)
+    opt = get_optimizer("dct_adamw", lr=1e-3, rank=16)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    import jax.numpy as jnp
+    init_state = lambda: TrainState(jnp.zeros((), jnp.int32), params,  # noqa: E731
+                                    opt.init(params))
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq,
+                     global_batch=batch, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, opt))    # shared: compile once
+
+    def wave() -> float:
+        """Average wall seconds per step over one fresh Trainer run."""
+        trainer = Trainer(train_step=step_fn, init_state_fn=init_state,
+                          batch_fn=lambda i: ds.batch(jnp.int32(i)),
+                          log_fn=lambda s: None, log_every=10**9)
+        t0 = time.perf_counter()
+        trainer.run(steps_per_wave, resume=False)
+        return (time.perf_counter() - t0) / steps_per_wave
+
+    obs.disable()
+    wave()                                          # compile warmup
+    s_step: dict[str, list[float]] = {"off": [], "on": []}
+    reg = obs.registry()
+    for k in range(2 * waves):
+        label = ("off", "on")[(k + k // 2) % 2]
+        if label == "on":
+            obs.enable()
+            before = reg.get("train_step_seconds").count()
+        s = wave()
+        if label == "on":
+            grew = reg.get("train_step_seconds").count() - before
+            obs.disable()
+            if grew != steps_per_wave:
+                raise RuntimeError(
+                    f"obs-on wave ran {steps_per_wave} steps but the "
+                    f"histogram saw {grew} — train instrumentation is "
+                    f"not live")
+        s_step[label].append(s)
+    return {
+        "model": cfg.name,
+        "steps_per_wave": steps_per_wave,
+        "waves_per_variant": waves,
+        "s_per_step_off": s_step["off"],
+        "s_per_step_on": s_step["on"],
+        "s_per_step_off_min": min(s_step["off"]),
+        "s_per_step_on_min": min(s_step["on"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver + gates
+# ---------------------------------------------------------------------------
+def run(*, waves: int = 6, serve_new_tokens: int = 24,
+        train_steps_per_wave: int = 25,
+        serve_threshold: float = 0.02, train_threshold: float = 0.01,
+        out_path: str | None = "BENCH_obs_overhead.json") -> dict:
+    was_enabled = obs.enabled()
+    try:
+        serve = bench_serve(waves=waves, new_tokens=serve_new_tokens)
+        train = bench_train(waves=waves,
+                            steps_per_wave=train_steps_per_wave)
+    finally:
+        # the benchmark must not leave the process-wide flag flipped
+        (obs.enable if was_enabled else obs.disable)()
+
+    serve_frac = 1.0 - serve["paired_on_over_off_median"]
+    train_frac = ((train["s_per_step_on_min"] - train["s_per_step_off_min"])
+                  / max(train["s_per_step_off_min"], 1e-30))
+    result = {
+        "bench": "obs_overhead",
+        "backend": jax.default_backend(),
+        "serve": serve,
+        "train": train,
+        "serve_overhead_frac": serve_frac,
+        "train_overhead_frac": train_frac,
+        "serve_threshold": serve_threshold,
+        "train_threshold": train_threshold,
+    }
+    print(f"[obs_overhead] serve churn: off {serve['tok_s_off_best']:.1f} "
+          f"tok/s, on {serve['tok_s_on_best']:.1f} tok/s; paired median "
+          f"overhead {serve_frac * 100:+.2f}% "
+          f"(gate {serve_threshold * 100:.0f}%)")
+    print(f"[obs_overhead] train loop: off "
+          f"{train['s_per_step_off_min'] * 1e3:.2f} ms/step, on "
+          f"{train['s_per_step_on_min'] * 1e3:.2f} ms/step "
+          f"({train_frac * 100:+.2f}%, gate {train_threshold * 100:.0f}%)")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[obs_overhead] wrote {out_path}")
+    failures = []
+    if serve_frac > serve_threshold:
+        failures.append(f"serving tok/s regressed {serve_frac * 100:+.2f}% "
+                        f"(gate {serve_threshold * 100:.0f}%)")
+    if train_frac > train_threshold:
+        failures.append(f"train step regressed {train_frac * 100:+.2f}% "
+                        f"(gate {train_threshold * 100:.0f}%)")
+    if failures:
+        raise RuntimeError("obs overhead gate: " + "; ".join(failures))
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--waves", type=int, default=6)
+    ap.add_argument("--serve-new-tokens", type=int, default=24)
+    ap.add_argument("--train-steps", type=int, default=25)
+    ap.add_argument("--serve-threshold", type=float, default=0.02)
+    ap.add_argument("--train-threshold", type=float, default=0.01)
+    ap.add_argument("--out", default="BENCH_obs_overhead.json")
+    args = ap.parse_args()
+    run(waves=args.waves, serve_new_tokens=args.serve_new_tokens,
+        train_steps_per_wave=args.train_steps,
+        serve_threshold=args.serve_threshold,
+        train_threshold=args.train_threshold, out_path=args.out)

@@ -22,6 +22,10 @@ Sections:
                                          paged-vs-dense cache bytes, tok/s
                                          static vs churn, flash-decode
                                          dispatch gate -> BENCH_serve.json
+  obs_overhead         DESIGN.md §13     obs-on vs obs-off serving tok/s
+                                         (≤2% gate) and train-loop wall
+                                         (≤1% gate) ->
+                                         BENCH_obs_overhead.json
 """
 from __future__ import annotations
 
@@ -39,8 +43,8 @@ def main(argv=None) -> int:
     steps = 15 if args.fast else 40
 
     from . import (dct_adamw_vs_ldadamw, finetune, frugal_fira,
-                   makhoul_vs_matmul, projection_errors, serve_decode,
-                   telemetry_overhead, trion_vs_dion)
+                   makhoul_vs_matmul, obs_overhead, projection_errors,
+                   serve_decode, telemetry_overhead, trion_vs_dion)
 
     sections = {
         "trion_vs_dion": lambda: trion_vs_dion.run(steps=steps),
@@ -88,6 +92,18 @@ def main(argv=None) -> int:
             new_tokens=8 if args.fast else 32,
             out_path=("BENCH_serve_fast.json" if args.fast
                       else "BENCH_serve.json")),
+        # obs-on vs obs-off hot-path gates (fast mode: fewer/shorter waves
+        # can't resolve a 1-2% wall gate on a noisy box, so the scratch
+        # variant loosens the thresholds — same precedent as
+        # telemetry_overhead; CI's obs job runs the full gates)
+        "obs_overhead": lambda: obs_overhead.run(
+            waves=2 if args.fast else 6,
+            serve_new_tokens=8 if args.fast else 24,
+            train_steps_per_wave=10 if args.fast else 25,
+            serve_threshold=0.15 if args.fast else 0.02,
+            train_threshold=0.10 if args.fast else 0.01,
+            out_path=("BENCH_obs_overhead_fast.json" if args.fast
+                      else "BENCH_obs_overhead.json")),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     failures = 0

@@ -12,7 +12,11 @@ staggered requests with different sampling params into a block-pool KV
 cache; the continuous-batching scheduler admits and retires them
 between jit'd flash-decode steps, one request streams token-by-token,
 another is cancelled mid-flight, and the pool stats are printed at the
-end.
+end. With ``--metrics`` the obs layer (DESIGN.md §13,
+docs/observability.md) is enabled for the run: a per-request latency
+table (queue wait / TTFT / mean ITL / E2E) is printed from the handle
+timestamps and a Prometheus text-exposition snapshot plus a Chrome
+trace are written under ``--metrics-dir``.
 
 Uses the reduced (smoke) config of the chosen architecture so it runs
 on CPU; the full config is exercised via the dry-run.
@@ -106,6 +110,38 @@ def run_paged(cfg, params, args, rng):
           f"after drain, paged {stats['cache_bytes'] / 1e6:.2f}MB vs "
           f"dense-equivalent {stats['dense_bytes_equivalent'] / 1e6:.2f}MB, "
           f"{stats['steps']} decode steps")
+    if args.metrics:
+        _report_metrics(args, (streamed, doomed, *rest))
+
+
+def _report_metrics(args, handles):
+    import os
+
+    from repro import obs
+
+    def fmt(v, spec):
+        # a request cancelled before admission has no queue_wait/ttft
+        return format(v, spec) if v is not None else "-"
+
+    print("\nper-request latency (seconds; quantized to decode steps):")
+    print(f"  {'request':<22} {'finish':<10} {'toks':>4} {'queue':>7} "
+          f"{'ttft':>7} {'itl_mean':>8} {'e2e':>7}")
+    for h in handles:
+        s = h.latency_summary()
+        print(f"  {s['request_id']:<22} {s['finish_reason']:<10} "
+              f"{s['n_tokens']:>4} {fmt(s['queue_wait'], '.3f'):>7} "
+              f"{fmt(s['ttft'], '.3f'):>7} {fmt(s['itl_mean'], '.4f'):>8} "
+              f"{fmt(s['e2e'], '.3f'):>7}")
+    r = obs.registry()
+    ttft, itl = r.get("serve_ttft_seconds"), r.get("serve_itl_seconds")
+    print(f"ttft p50/p99: {ttft.quantile(0.5):.3f}/{ttft.quantile(0.99):.3f}"
+          f"  itl p50/p99: {itl.quantile(0.5):.4f}/{itl.quantile(0.99):.4f}")
+    os.makedirs(args.metrics_dir, exist_ok=True)
+    prom = obs.write_prometheus(
+        os.path.join(args.metrics_dir, "metrics.prom"))
+    trace = obs.write_chrome_trace(
+        os.path.join(args.metrics_dir, "trace.json"))
+    print(f"wrote {prom} and {trace}")
 
 
 def main():
@@ -116,7 +152,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable the obs layer (paged engine only): "
+                         "per-request latency table + Prometheus snapshot "
+                         "+ Chrome trace under --metrics-dir")
+    ap.add_argument("--metrics-dir", default="/tmp/serve_metrics")
     args = ap.parse_args()
+
+    if args.metrics:
+        if args.engine != "paged":
+            raise SystemExit("--metrics instruments the paged engine; "
+                             "use --engine paged")
+        from repro import obs
+        obs.enable()
 
     cfg = get_config(args.arch, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))

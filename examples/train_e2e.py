@@ -31,6 +31,9 @@ if __name__ == "__main__":
                     choices=["dct", "dst", "hadamard", "randortho"],
                     help="predefined-basis backend (switches the run to "
                          "dct_adamw, the preset the basis plugs into)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="enable the obs layer (DESIGN.md §13) and write "
+                         "metrics.prom + trace.json artifacts there")
     args = ap.parse_args()
     steps = 20 if args.smoke else args.steps
     # telemetry/basis runs exercise the paper's optimizer (projected-Adam
@@ -47,6 +50,10 @@ if __name__ == "__main__":
             argv += ["--telemetry-path", args.telemetry_path]
     if args.basis:
         argv += ["--basis", args.basis]
+    if args.obs_dir:
+        # sampled honest full-state sync every 5 steps rides along so the
+        # artifact carries train_full_sync_seconds too
+        argv += ["--obs-dir", args.obs_dir, "--obs-sync-every", "5"]
     if args.smoke:
         # llama-30m is already the CPU-sized paper model; just shrink the run
         argv += ["--seq-len", "64", "--batch", "4"]

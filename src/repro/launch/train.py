@@ -75,6 +75,17 @@ def build(argv=None):
                          "from index-overlap drift")
     ap.add_argument("--control-every", type=int, default=50,
                     help="steps between controller decisions")
+    # runtime observability (DESIGN.md §13, docs/observability.md)
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="enable the obs layer (host-side metrics + phase "
+                         "spans) and write DIR/metrics.prom + "
+                         "DIR/trace.json at the end of the run (halted "
+                         "runs included)")
+    ap.add_argument("--obs-sync-every", type=int, default=0,
+                    help="with --obs-dir: every N steps also "
+                         "block_until_ready the full train state into "
+                         "train_full_sync_seconds (0 = off; see the "
+                         "timing note in train/loop.py)")
     # resilience + fault injection (DESIGN.md §11, docs/resilience.md)
     ap.add_argument("--resilient", action="store_true",
                     help="arm the in-jit anomaly guard and the host-side "
@@ -219,10 +230,16 @@ def main(argv=None) -> int:
         sink = TelemetrySink(path, fmt=args.telemetry,
                              every=args.telemetry_every, append=resuming)
 
+    obs_mod = None
+    if args.obs_dir:
+        from repro import obs as obs_mod
+        obs_mod.enable()
+
     trainer_kw = dict(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                       log_every=args.log_every,
                       log_metrics=sink.log_metrics if sink else None,
-                      resilience=resilience)
+                      resilience=resilience,
+                      sync_sample_every=args.obs_sync_every)
     if chaos_plan is not None and args.ckpt_dir:
         trainer_kw["ckpt_fault_hook"] = chaos_plan.bind_checkpoint_dir(
             args.ckpt_dir)
@@ -314,6 +331,14 @@ def main(argv=None) -> int:
     finally:
         if sink is not None:
             sink.close()
+        if obs_mod is not None:
+            import os
+            os.makedirs(args.obs_dir, exist_ok=True)
+            prom = obs_mod.write_prometheus(
+                os.path.join(args.obs_dir, "metrics.prom"))
+            trace = obs_mod.write_chrome_trace(
+                os.path.join(args.obs_dir, "trace.json"))
+            print(f"[train] obs artifacts: {prom}, {trace}")
     final = trainer.metrics_history[-1] if trainer.metrics_history else {}
     if final:
         print(f"[train] done at step {int(state.step)}: "

@@ -24,18 +24,66 @@ neighbours.
 from __future__ import annotations
 
 import math
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import transformer as T
 
 from .kv_cache import PagedCacheConfig, PagedKVCache
 from .scheduler import Scheduler
 from .session import (GenerationHandle, Request, SamplingParams, fold_keys,
                       sample_tokens)
+
+
+def _serve_metrics():
+    """Register (or fetch) the serving instruments on the process-wide
+    registry. Label/bucket formatting happens only at export; the per-step
+    hot path below is tuple-keyed dict updates (no-ops while obs is
+    disabled). Metric catalog: docs/observability.md."""
+    r = obs.registry()
+    return {
+        "ttft": r.histogram(
+            "serve_ttft_seconds",
+            "submit -> first token (includes queue wait and prefill)"),
+        "itl": r.histogram(
+            "serve_itl_seconds",
+            "inter-token latency (gap between consecutive emissions)"),
+        "queue_wait": r.histogram(
+            "serve_queue_wait_seconds", "submit -> admission"),
+        "e2e": r.histogram(
+            "serve_e2e_seconds", "submit -> finish (any reason)"),
+        "tokens": r.counter("serve_tokens_total", "tokens emitted"),
+        "submitted": r.counter("serve_requests_submitted_total",
+                               "requests accepted by submit()"),
+        "finished": r.counter("serve_requests_finished_total",
+                              "requests retired, by finish reason",
+                              labels=("reason",)),
+        "admissions": r.counter("serve_admissions_total",
+                                "requests admitted into a slot"),
+        "backpressure": r.counter(
+            "serve_backpressure_steps_total",
+            "steps the queue head stayed blocked, by cause",
+            labels=("cause",)),
+        "cancels": r.counter("serve_cancellations_total",
+                             "cancellations processed, by request state",
+                             labels=("state",)),
+        "slots_active": r.gauge("serve_slots_active",
+                                "occupied decode slot lanes"),
+        "queue_depth": r.gauge("serve_queue_depth", "pending requests"),
+        "pool_util": r.gauge(
+            "serve_pool_utilization",
+            "tokens held / token capacity of the held blocks"),
+        "pool_frag": r.gauge(
+            "serve_pool_fragmentation",
+            "internal fragmentation of held blocks (1 - utilization)"),
+        "pool_used": r.gauge("serve_pool_used_blocks", "blocks in use"),
+        "pool_free": r.gauge("serve_pool_free_blocks", "blocks free"),
+    }
 
 
 def make_serve_step(cfg):
@@ -199,6 +247,13 @@ class PagedServeEngine:
         self.handles: dict[str, GenerationHandle] = {}
         self._cancelled: set[str] = set()
         self.steps = 0
+        self.tokens_emitted = 0
+        # per-step runtime stats (slot occupancy, pool utilization /
+        # fragmentation from the BlockAllocator, queue depth) — refreshed
+        # at every step boundary whether or not the obs layer is enabled
+        self.step_stats: dict = {}
+        self._m = _serve_metrics()
+        self._tracer = obs.tracer()
 
         self._decode = jax.jit(_make_paged_step(cfg, num_splits))
         self._first = jax.jit(_make_paged_first())
@@ -221,7 +276,9 @@ class PagedServeEngine:
                 f"max_prefill_len={self.max_prefill_len}")
         self.sched.enqueue(req)           # validates the block budget
         handle = GenerationHandle(req, self, on_token=on_token)
+        handle.t_submit = time.perf_counter()
         self.handles[req.request_id] = handle
+        self._m["submitted"].inc()
         return handle
 
     def cancel(self, request_id: str) -> None:
@@ -236,50 +293,68 @@ class PagedServeEngine:
     def _retire(self, slot: int, reason: str) -> None:
         req = self.sched.retire(slot)
         self.cache.clear_slot(slot)
-        self.handles[req.request_id]._finish(reason)
+        handle = self.handles[req.request_id]
+        handle._finish(reason)
+        self._m["finished"].inc(1, (reason,))
+        if handle.e2e is not None:
+            self._m["e2e"].observe(handle.e2e)
 
     def _process_cancellations(self) -> None:
         for rid in list(self._cancelled):
             self._cancelled.discard(rid)
             if self.sched.drop_pending(rid):
                 self.handles[rid]._finish("cancelled")
+                self._m["cancels"].inc(1, ("queued",))
+                self._m["finished"].inc(1, ("cancelled",))
                 continue
             slot = self.sched.slot_of(rid)
             if slot is not None:
+                self._m["cancels"].inc(1, ("running",))
                 self._retire(slot, "cancelled")
 
     def _admit(self, slot: int, req: Request) -> None:
         """Chunked prefill into the dense scratch, whole-block scatter
         into the pools, then sample the request's first token."""
+        handle = self.handles[req.request_id]
+        handle.t_admit = time.perf_counter()
+        self._m["admissions"].inc()
+        if handle.queue_wait is not None:
+            self._m["queue_wait"].observe(handle.queue_wait)
         s = len(req.prompt)
         c = self.prefill_chunk
-        padded = np.zeros((1, self.max_prefill_len), np.int32)
-        padded[0, :s] = req.prompt
-        last = None
-        for start in range(0, s, c):
-            take = max(min(s - 1 - start, c - 1), 0)
-            logits, self.scratch = self._prefill(
-                self.params, self.scratch,
-                jnp.asarray(padded[:, start:start + c]),
-                jnp.int32(start), jnp.int32(take))
-            if start <= s - 1 < start + c:
-                last = logits
+        with self._tracer.span("serve/admit", step=self.steps,
+                               prompt_len=s, slot=slot):
+            padded = np.zeros((1, self.max_prefill_len), np.int32)
+            padded[0, :s] = req.prompt
+            last = None
+            for start in range(0, s, c):
+                take = max(min(s - 1 - start, c - 1), 0)
+                logits, self.scratch = self._prefill(
+                    self.params, self.scratch,
+                    jnp.asarray(padded[:, start:start + c]),
+                    jnp.int32(start), jnp.int32(take))
+                if start <= s - 1 < start + c:
+                    last = logits
 
-        ids = np.zeros((self.cache_cfg.max_blocks_per_seq,), np.int32)
-        table = self.sched.allocator.table(req.request_id)
-        ids[:len(table)] = table
-        self.cache.pools = self._write(self.cache.pools, self.scratch,
-                                       jnp.asarray(ids), jnp.int32(s))
-        self.cache.bind_slot(slot, req.request_id)
+            ids = np.zeros((self.cache_cfg.max_blocks_per_seq,), np.int32)
+            table = self.sched.allocator.table(req.request_id)
+            ids[:len(table)] = table
+            self.cache.pools = self._write(self.cache.pools, self.scratch,
+                                           jnp.asarray(ids), jnp.int32(s))
+            self.cache.bind_slot(slot, req.request_id)
 
-        lanes = self.sched.lanes
-        tok, hit = self._first(
-            last, jnp.asarray(lanes.key[slot]), jnp.int32(s - 1),
-            jnp.float32(lanes.temperature[slot]),
-            jnp.int32(lanes.top_k[slot]), jnp.float32(lanes.top_p[slot]),
-            jnp.int32(lanes.eos[slot]))
-        tok_i = int(tok)
-        self.handles[req.request_id]._emit(tok_i)
+            lanes = self.sched.lanes
+            tok, hit = self._first(
+                last, jnp.asarray(lanes.key[slot]), jnp.int32(s - 1),
+                jnp.float32(lanes.temperature[slot]),
+                jnp.int32(lanes.top_k[slot]), jnp.float32(lanes.top_p[slot]),
+                jnp.int32(lanes.eos[slot]))
+            tok_i = int(tok)
+        handle._emit(tok_i)
+        self.tokens_emitted += 1
+        self._m["tokens"].inc()
+        if handle.ttft is not None:
+            self._m["ttft"].observe(handle.ttft)
         n = self.sched.note_token(slot)
         if bool(hit):
             self._retire(slot, "eos")
@@ -296,26 +371,38 @@ class PagedServeEngine:
         self._process_cancellations()
         for slot, req in self.sched.admit_ready():
             self._admit(slot, req)
+        cause = self.sched.blocked_reason()
+        if cause is not None:
+            self._m["backpressure"].inc(1, (cause,))
         if not self.sched.running:
+            self._refresh_step_stats()
             return self.sched.has_work
 
         lanes = self.sched.lanes
-        pools, logits, tok, hit = self._decode(
-            self.params, self.cache.pools, jnp.asarray(lanes.token),
-            jnp.asarray(lanes.pos), self.cache.block_table(),
-            jnp.asarray(lanes.active), jnp.asarray(lanes.key),
-            jnp.asarray(lanes.temperature), jnp.asarray(lanes.top_k),
-            jnp.asarray(lanes.top_p), jnp.asarray(lanes.eos))
-        self.cache.pools = pools
-        self.last_logits = logits       # device array; tests/debug only
-        self.steps += 1
-        # the single host sync of the step: the streamed tokens + eos hits
-        tok_h = np.asarray(tok)
-        hit_h = np.asarray(hit)
+        with self._tracer.span("serve/decode_step", step=self.steps,
+                               batch=len(self.sched.running)):
+            pools, logits, tok, hit = self._decode(
+                self.params, self.cache.pools, jnp.asarray(lanes.token),
+                jnp.asarray(lanes.pos), self.cache.block_table(),
+                jnp.asarray(lanes.active), jnp.asarray(lanes.key),
+                jnp.asarray(lanes.temperature), jnp.asarray(lanes.top_k),
+                jnp.asarray(lanes.top_p), jnp.asarray(lanes.eos))
+            self.cache.pools = pools
+            self.last_logits = logits   # device array; tests/debug only
+            self.steps += 1
+            # the single host sync of the step: streamed tokens + eos hits
+            tok_h = np.asarray(tok)
+            hit_h = np.asarray(hit)
         for slot in sorted(self.sched.running):
             req = self.sched.running[slot]
             t = int(tok_h[slot])
-            self.handles[req.request_id]._emit(t)
+            handle = self.handles[req.request_id]
+            handle._emit(t)
+            self.tokens_emitted += 1
+            self._m["tokens"].inc()
+            tt = handle.token_times
+            if len(tt) >= 2:
+                self._m["itl"].observe(tt[-1] - tt[-2])
             n = self.sched.note_token(slot)
             lanes.token[slot] = t
             lanes.pos[slot] += 1
@@ -323,7 +410,33 @@ class PagedServeEngine:
                 self._retire(slot, "eos")
             elif n >= req.max_new_tokens:
                 self._retire(slot, "length")
+        self._refresh_step_stats()
         return self.sched.has_work
+
+    def _refresh_step_stats(self) -> None:
+        """Rebuild :attr:`step_stats` (and, when obs is on, the gauges)
+        from host-side scheduler/allocator state. Always runs at the step
+        boundary — the dict is the no-obs-needed view of slot occupancy
+        and block-pool health (utilization, internal fragmentation)."""
+        alloc = self.cache.allocator.stats()
+        running = len(self.sched.running)
+        pending = len(self.sched.pending)
+        self.step_stats = {
+            "step": self.steps,
+            "running": running,
+            "pending": pending,
+            "tokens_emitted": self.tokens_emitted,
+            "used_blocks": alloc["used_blocks"],
+            "free_blocks": alloc["free_blocks"],
+            "utilization": alloc["utilization"],
+            "fragmentation": alloc["fragmentation"],
+        }
+        self._m["slots_active"].set(running)
+        self._m["queue_depth"].set(pending)
+        self._m["pool_util"].set(alloc["utilization"])
+        self._m["pool_frag"].set(alloc["fragmentation"])
+        self._m["pool_used"].set(alloc["used_blocks"])
+        self._m["pool_free"].set(alloc["free_blocks"])
 
     def run(self) -> None:
         """Drain the queue: step until every request has finished."""
@@ -335,4 +448,5 @@ class PagedServeEngine:
         s["pending"] = len(self.sched.pending)
         s["running"] = len(self.sched.running)
         s["steps"] = self.steps
+        s["tokens_emitted"] = self.tokens_emitted
         return s

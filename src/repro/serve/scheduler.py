@@ -100,6 +100,22 @@ class Scheduler:
         return blocks_for(len(req.prompt) + req.max_new_tokens,
                           self.allocator.block_size)
 
+    def blocked_reason(self) -> Optional[str]:
+        """Why the queue head is not admitted right now: ``"slots"`` (no
+        free slot lane), ``"blocks"`` (pool cannot reserve its worst
+        case), or None when the queue is empty / admission would proceed.
+        Called after ``admit_ready`` drained what fits, this is the
+        backpressure cause for this step."""
+        if not self.pending:
+            return None
+        if not self._free_slots:
+            return "slots"
+        head = self.pending[0]
+        if not self.allocator.can_alloc(len(head.prompt)
+                                        + head.max_new_tokens):
+            return "blocks"
+        return None
+
     # -- lifecycle --------------------------------------------------------
     def enqueue(self, req: Request) -> None:
         need = self.blocks_needed(req)

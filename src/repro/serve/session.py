@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Callable, Iterator, Optional, Sequence
 
 import jax
@@ -128,13 +129,26 @@ class Request:
 
 class GenerationHandle:
     """Live view of one request: collected tokens, completion state,
-    streaming, cancellation. Produced by ``PagedServeEngine.submit``."""
+    streaming, cancellation. Produced by ``PagedServeEngine.submit``.
+
+    Lifecycle wall-clock timestamps (``time.perf_counter`` seconds) are
+    stamped by the engine at its existing host boundaries — submit,
+    admission, each token's host readback, finish — so per-request
+    latencies (queue wait, TTFT, inter-token, end-to-end) are always
+    reconstructable from the handle, with or without the obs layer:
+    ``t_submit`` / ``t_admit`` / ``t_finish`` plus ``token_times[i]``
+    (the emission time of ``tokens[i]``).
+    """
 
     def __init__(self, request: Request, engine,
                  on_token: Optional[Callable[[Request, int], None]] = None):
         self.request = request
         self.tokens: list[int] = []
         self.finish_reason: Optional[str] = None
+        self.t_submit: Optional[float] = None
+        self.t_admit: Optional[float] = None
+        self.t_finish: Optional[float] = None
+        self.token_times: list[float] = []
         self._engine = engine
         self._on_token = on_token
 
@@ -145,12 +159,58 @@ class GenerationHandle:
     # called by the engine ------------------------------------------------
     def _emit(self, token: int) -> None:
         self.tokens.append(token)
+        self.token_times.append(time.perf_counter())
         if self._on_token is not None:
             self._on_token(self.request, token)
 
     def _finish(self, reason: str) -> None:
         if self.finish_reason is None:
             self.finish_reason = reason
+            self.t_finish = time.perf_counter()
+
+    # latency views --------------------------------------------------------
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Seconds between submission and admission (None until admitted
+        — e.g. a request cancelled while still queued)."""
+        if self.t_admit is None or self.t_submit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token, measured from submission (includes queue
+        wait and prefill)."""
+        if not self.token_times or self.t_submit is None:
+            return None
+        return self.token_times[0] - self.t_submit
+
+    def inter_token_latencies(self) -> list[float]:
+        """Gaps between consecutive token emissions (empty for <2
+        tokens). The engine emits at decode-step boundaries, so each gap
+        is quantized to whole decode steps."""
+        tt = self.token_times
+        return [b - a for a, b in zip(tt, tt[1:])]
+
+    @property
+    def e2e(self) -> Optional[float]:
+        """End-to-end seconds from submission to finish."""
+        if self.t_finish is None or self.t_submit is None:
+            return None
+        return self.t_finish - self.t_submit
+
+    def latency_summary(self) -> dict:
+        """Per-request latency record (the ``--metrics`` table row)."""
+        itl = self.inter_token_latencies()
+        return {
+            "request_id": self.request.request_id,
+            "finish_reason": self.finish_reason,
+            "n_tokens": len(self.tokens),
+            "queue_wait": self.queue_wait,
+            "ttft": self.ttft,
+            "itl_mean": sum(itl) / len(itl) if itl else None,
+            "e2e": self.e2e,
+        }
 
     # called by the tenant -------------------------------------------------
     def cancel(self) -> None:

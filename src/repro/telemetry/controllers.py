@@ -42,6 +42,29 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro import obs
+
+
+def _controller_metrics():
+    """Controller instruments (no-ops until ``obs.enable()``). Each
+    adopted proposal also lands on the span tracer as a structured
+    instant carrying the full before/after maps."""
+    r = obs.registry()
+    return {
+        "rank_decisions": r.counter(
+            "controller_rank_reallocations_total",
+            "adopted rank re-allocations"),
+        "interval_decisions": r.counter(
+            "controller_interval_changes_total",
+            "adopted refresh-interval ladder moves"),
+        "ranks_changed": r.counter(
+            "controller_ranks_changed_total",
+            "leaves whose rank moved across all re-allocations"),
+        "rank_spread": r.gauge(
+            "controller_rank_spread",
+            "max - min allocated rank after the last decision"),
+    }
+
 
 # ---------------------------------------------------------------------------
 # leaf inventory
@@ -131,6 +154,8 @@ class RankAllocator:
         self.ema: dict[str, float] = {}
         self.last_decision = 0
         self.n_decisions = 0
+        self._m = _controller_metrics()
+        self._tracer = obs.tracer()
 
     # -- telemetry ingestion ------------------------------------------------
     def observe(self, step: int, stats_by_path: dict[str, dict]) -> None:
@@ -184,8 +209,19 @@ class RankAllocator:
             i += 1
         if used(new) > self.budget or new == self.alloc:
             return None
+        before = dict(self.alloc)
         self.alloc = new
         self.n_decisions += 1
+        moved = {p: (before[p], r) for p, r in new.items()
+                 if r != before[p]}
+        self._m["rank_decisions"].inc()
+        self._m["ranks_changed"].inc(len(moved))
+        self._m["rank_spread"].set(max(new.values()) - min(new.values()))
+        self._tracer.instant(
+            "controller/rank_realloc", step=step,
+            changed={p: {"before": b, "after": a}
+                     for p, (b, a) in moved.items()},
+            budget_used=used(new), budget=self.budget)
         return dict(new)
 
     # -- persistence --------------------------------------------------------
@@ -239,6 +275,8 @@ class RefreshScheduler:
         self.drift_ema: dict[str, float] = {}
         self.last_change: dict[str, int] = {p: 0 for p in paths}
         self.last_decision = 0
+        self._m = _controller_metrics()
+        self._tracer = obs.tracer()
 
     def observe(self, step: int, stats_by_path: dict[str, dict]) -> None:
         d = self.cfg.ema_decay
@@ -264,7 +302,7 @@ class RefreshScheduler:
         if step - self.last_decision < cfg.decide_every:
             return None
         self.last_decision = step
-        changed = False
+        moved: dict[str, tuple[int, int]] = {}
         for p, ema in self.drift_ema.items():
             if step - self.last_change[p] < cfg.cooldown:
                 continue
@@ -276,8 +314,16 @@ class RefreshScheduler:
             else:
                 continue
             self.last_change[p] = step
-            changed = True
-        return dict(self.interval) if changed else None
+            moved[p] = (cur, self.interval[p])
+        if not moved:
+            return None
+        self._m["interval_decisions"].inc()
+        self._tracer.instant(
+            "controller/interval_change", step=step,
+            changed={p: {"before": b, "after": a, "drift":
+                         round(self.drift_ema[p], 4)}
+                     for p, (b, a) in moved.items()})
+        return dict(self.interval)
 
     def state_dict(self) -> dict:
         return {"interval": dict(self.interval),

@@ -48,6 +48,7 @@ import os
 import re
 import shutil
 import threading
+import time
 import zlib
 from typing import Any, Callable
 
@@ -55,7 +56,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 _SEP = "||"
+
+
+def _ckpt_metrics():
+    """Checkpoint-IO instruments (no-ops until ``obs.enable()``)."""
+    r = obs.registry()
+    return {
+        "save_s": r.histogram("ckpt_save_seconds",
+                              "write + fsync-equivalent publish of one "
+                              "checkpoint (writer-thread time for async)"),
+        "restore_s": r.histogram("ckpt_restore_seconds",
+                                 "load + verify + rebuild of one "
+                                 "checkpoint"),
+        "verify_s": r.histogram("ckpt_verify_seconds",
+                                "standalone load + CRC verification"),
+        "bytes_written": r.counter("ckpt_bytes_written_total",
+                                   "uncompressed leaf bytes saved"),
+        "bytes_read": r.counter("ckpt_bytes_read_total",
+                                "uncompressed leaf bytes loaded on "
+                                "restore"),
+        "saves": r.counter("ckpt_saves_total", "published checkpoints"),
+        "restores": r.counter("ckpt_restores_total",
+                              "successful restores"),
+        "corrupt": r.counter("ckpt_corruptions_total",
+                             "verification failures"),
+    }
+
+
+def _nbytes(flat: dict[str, np.ndarray]) -> int:
+    return sum(a.nbytes for a in flat.values())
 
 
 class CheckpointCorruptError(RuntimeError):
@@ -126,6 +158,8 @@ class CheckpointManager:
         self.keep = keep
         self.log = log
         self.fault_hook = fault_hook
+        self._m = _ckpt_metrics()
+        self._tracer = obs.tracer()
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
         self._pending: threading.Thread | None = None
@@ -175,24 +209,32 @@ class CheckpointManager:
         record) load unverified — backward compatible."""
         base = os.path.join(self.dir, f"step_{step}")
         try:
-            manifest = self.manifest(step)
-            with np.load(os.path.join(base, "state.npz")) as z:
-                flat = {k: z[k] for k in z.files}
-        except CheckpointCorruptError:
+            try:
+                manifest = self.manifest(step)
+                with np.load(os.path.join(base, "state.npz")) as z:
+                    flat = {k: z[k] for k in z.files}
+            except CheckpointCorruptError:
+                raise
+            except Exception as e:        # torn zip, missing file, bad json
+                raise CheckpointCorruptError(
+                    f"step {step}: unreadable checkpoint "
+                    f"({type(e).__name__}: {e})") from e
+            leaves = manifest.get("leaves")
+            if leaves is not None:
+                _check_integrity(step, flat, leaves)
+        except CheckpointCorruptError as e:
+            self._m["corrupt"].inc()
+            self._tracer.instant("ckpt/corrupt", step=step, error=str(e))
             raise
-        except Exception as e:            # torn zip, missing file, bad json
-            raise CheckpointCorruptError(
-                f"step {step}: unreadable checkpoint ({type(e).__name__}: "
-                f"{e})") from e
-        leaves = manifest.get("leaves")
-        if leaves is not None:
-            _check_integrity(step, flat, leaves)
         return flat
 
     def verify(self, step: int) -> None:
         """Raise :class:`CheckpointCorruptError` unless ``step`` loads and
         matches its manifest's per-leaf CRC32/shape/dtype record."""
-        self._load_verified(step)
+        t0 = time.perf_counter()
+        with self._tracer.span("ckpt/verify", step=step):
+            self._load_verified(step)
+        self._m["verify_s"].observe(time.perf_counter() - t0)
 
     def quarantine(self, step: int) -> str:
         """Move a corrupt checkpoint aside (``step_N.corrupt``) so
@@ -226,6 +268,16 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
     def _write(self, step: int, flat: dict[str, np.ndarray],
                extra: dict | None) -> None:
+        t0 = time.perf_counter()
+        with self._tracer.span("ckpt/write", step=step,
+                               mb=round(_nbytes(flat) / 2**20, 2)):
+            self._write_inner(step, flat, extra)
+        self._m["save_s"].observe(time.perf_counter() - t0)
+        self._m["bytes_written"].inc(_nbytes(flat))
+        self._m["saves"].inc()
+
+    def _write_inner(self, step: int, flat: dict[str, np.ndarray],
+                     extra: dict | None) -> None:
         final = os.path.join(self.dir, f"step_{step}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -291,11 +343,16 @@ class CheckpointManager:
         mismatch). With ``shardings`` (pytree of NamedSharding for the
         *current* mesh), leaves are placed sharded — the saved file is
         mesh-agnostic, so this reshards elastically."""
-        flat = self._load_verified(step)
-        tree = _unflatten_into(target, flat)
-        if shardings is not None:
-            tree = jax.tree.map(
-                lambda x, s: jax.device_put(x, s), tree, shardings)
+        t0 = time.perf_counter()
+        with self._tracer.span("ckpt/restore", step=step):
+            flat = self._load_verified(step)
+            tree = _unflatten_into(target, flat)
+            if shardings is not None:
+                tree = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), tree, shardings)
+        self._m["restore_s"].observe(time.perf_counter() - t0)
+        self._m["bytes_read"].inc(_nbytes(flat))
+        self._m["restores"].inc()
         return tree
 
     def restore_latest(self, target: Any, shardings: Any | None = None):

@@ -7,8 +7,11 @@ Observability and control plug in through three hooks (DESIGN.md §8):
 ``log_metrics(record)``
     Structured per-step metrics: ``record`` is ``{"step": int,
     "s_per_step": float, **metrics}`` with metric values still device-side
-    (consumers decide when to sync). The trainer's own console line is
-    built from the same records by an internal default formatter, so plain
+    (consumers decide when to sync). ``s_per_step`` is the wall time of
+    the whole step body — data wait + dispatch + blocking on the loss —
+    see the timing note inside :meth:`Trainer.run` for exactly what that
+    does and does not measure. The trainer's own console line is built
+    from the same records by an internal default formatter, so plain
     ``print`` and the telemetry sink are both just consumers of this hook.
 ``control_hook(step, state, metrics) -> state | None``
     Closed-loop controllers (adaptive rank/refresh): called every step;
@@ -36,11 +39,39 @@ from typing import Any, Callable
 
 import jax
 
+from repro import obs
 from repro.data.pipeline import DataPipeline
 
 from .checkpoint import CheckpointManager
 from .resilience import TrainingHalted
 from .steps import TrainState
+
+
+def _train_metrics():
+    """Training-loop instruments on the process-wide registry (no-ops
+    until ``obs.enable()``). Catalog: docs/observability.md."""
+    r = obs.registry()
+    return {
+        "data_wait": r.histogram(
+            "train_data_wait_seconds",
+            "blocking on the data pipeline for the step's batch"),
+        "dispatch": r.histogram(
+            "train_dispatch_seconds",
+            "train_step call: trace/dispatch only, returns before "
+            "the device finishes"),
+        "host_sync": r.histogram(
+            "train_host_sync_seconds",
+            "blocking on the loss scalar after dispatch"),
+        "step_wall": r.histogram(
+            "train_step_seconds",
+            "full step body wall time (data wait + dispatch + loss sync)"),
+        "full_sync": r.histogram(
+            "train_full_sync_seconds",
+            "sampled data-ready -> whole-TrainState-ready wall time "
+            "(only when sync_sample_every > 0)"),
+        "steps": r.counter("train_steps_total",
+                           "step outcomes", labels=("outcome",)),
+    }
 
 
 class Trainer:
@@ -51,7 +82,7 @@ class Trainer:
                  log_metrics: Callable[[dict], None] | None = None,
                  control_hook=None, extra_state=None,
                  state_shardings=None, resilience=None,
-                 ckpt_fault_hook=None):
+                 ckpt_fault_hook=None, sync_sample_every: int = 0):
         self.train_step = train_step
         self.init_state_fn = init_state_fn
         self.batch_fn = batch_fn
@@ -67,6 +98,12 @@ class Trainer:
         self.extra_state = extra_state
         self.state_shardings = state_shardings
         self.resilience = resilience
+        # 0 disables the sampled full-state sync; K > 0 blocks on the
+        # whole TrainState every K steps to measure true per-step compute
+        # (s_per_step alone can't — see the timing note in run())
+        self.sync_sample_every = sync_sample_every
+        self._m = _train_metrics()
+        self._tracer = obs.tracer()
         self._preempted = False
         self._window: list[float] = []
 
@@ -155,13 +192,36 @@ class Trainer:
                 t0 = time.perf_counter()
                 data_step = step + (res.data_offset if res is not None
                                     else 0)
-                batch = pipeline.get(data_step)
-                state, metrics = self.train_step(state, batch)
-                # block on the loss before stopping the clock — the same
-                # sync point the historic float(loss) imposed — so
-                # s_per_step measures compute, not async dispatch latency
-                jax.block_until_ready(metrics["loss"])
+                with self._tracer.span("train/data_wait", step=step + 1):
+                    batch = pipeline.get(data_step)
+                t_data = time.perf_counter()
+                with self._tracer.span("train/dispatch", step=step + 1):
+                    state, metrics = self.train_step(state, batch)
+                t_disp = time.perf_counter()
+                # Timing note: blocking on the loss scalar is the same
+                # sync point the historic float(loss) imposed, so
+                # s_per_step is comparable across versions — but it is
+                # NOT pure compute. It includes the data wait above and
+                # only proves the loss is ready; donated/async outputs of
+                # the step (params, opt state) may still be in flight.
+                # The honest full-state figure is the sampled sync below
+                # (sync_sample_every), exported as
+                # train_full_sync_seconds.
+                with self._tracer.span("train/host_sync", step=step + 1):
+                    jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t0
+                self._m["data_wait"].observe(t_data - t0)
+                self._m["dispatch"].observe(t_disp - t_data)
+                self._m["host_sync"].observe(max(dt - (t_disp - t0), 0.0))
+                self._m["step_wall"].observe(dt)
+                if self.sync_sample_every > 0 \
+                        and (step + 1) % self.sync_sample_every == 0:
+                    with self._tracer.span("train/full_sync",
+                                           step=step + 1):
+                        jax.block_until_ready(state)
+                    # data-ready -> whole-state-ready: per-step compute
+                    self._m["full_sync"].observe(
+                        time.perf_counter() - t_data)
                 if "telemetry" in metrics and (
                         self.log_metrics is not None
                         or self.control_hook is not None):
@@ -184,10 +244,12 @@ class Trainer:
                         # prefetch stream contiguous)
                         res.skipped()
                         committed = False
+                        self._m["steps"].inc(1, ("skipped",))
                     elif action.kind == "rollback":
                         state, step, pipeline = self._rollback(step,
                                                                pipeline)
                         committed = False
+                        self._m["steps"].inc(1, ("rolled_back",))
                     elif action.kind == "halt":
                         if self.ckpt is not None:
                             res.dump(os.path.join(self.ckpt.dir,
@@ -195,6 +257,7 @@ class Trainer:
                                      context={"trainer_step": step})
                         raise TrainingHalted(action.reason)
                 if committed:
+                    self._m["steps"].inc(1, ("committed",))
                     # metrics_history keeps scalars only: retaining every
                     # step's per-leaf stats pytree would grow device memory
                     # unbounded, and the sink's ring/file persist them

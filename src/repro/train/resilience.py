@@ -53,9 +53,35 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 #: Exit code for an unrecoverable halt (rung 4). The supervisor treats it
 #: as permanent — no restart, the failure is deterministic.
 HALT_EXIT_CODE = 86
+
+
+def _ladder_metrics():
+    """Escalation-ladder instruments (no-ops until ``obs.enable()``).
+    Every decision also lands as a structured ``resilience/...`` instant
+    on the span tracer with before/after ladder state."""
+    r = obs.registry()
+    return {
+        "guard_trips": r.counter(
+            "resilience_guard_trips_total",
+            "steps where the in-jit guard reported non-finite"),
+        "spikes": r.counter("resilience_loss_spikes_total",
+                            "finite steps flagged as loss spikes"),
+        "actions": r.counter("resilience_actions_total",
+                             "ladder decisions, by rung",
+                             labels=("kind",)),
+        "lr_cuts": r.counter("resilience_lr_cuts_total",
+                             "rollbacks that also cut the learning rate"),
+        "lr_scale": r.gauge("resilience_lr_scale",
+                            "cumulative learning-rate scale"),
+        "rollback_budget": r.gauge(
+            "resilience_rollbacks_used",
+            "rollbacks consumed against cfg.max_rollbacks"),
+    }
 
 
 class TrainingHalted(RuntimeError):
@@ -159,6 +185,8 @@ class ResilienceManager:
                  log_fn: Callable[[str], None] = print):
         self.cfg = cfg or ResilienceConfig()
         self.log = log_fn
+        self._m = _ladder_metrics()
+        self._tracer = obs.tracer()
         self.consecutive_bad = 0
         self.consecutive_spikes = 0
         self.n_rollbacks = 0
@@ -185,28 +213,37 @@ class ResilienceManager:
         if not all_finite:
             self.consecutive_bad += 1
             self.healthy_streak = 0
+            self._m["guard_trips"].inc()
+            self._tracer.instant("resilience/guard_trip", step=step,
+                                 loss=float(loss),
+                                 consecutive=self.consecutive_bad)
             if self.consecutive_bad <= self.cfg.max_skips:
                 self.n_skips += 1
-                return Action("skip",
-                              f"non-finite step ({self.consecutive_bad}/"
-                              f"{self.cfg.max_skips} consecutive)")
-            return self._escalate("non-finite steps persist through "
-                                  f"{self.cfg.max_skips} skipped batches")
+                return self._decided(step, Action(
+                    "skip", f"non-finite step ({self.consecutive_bad}/"
+                            f"{self.cfg.max_skips} consecutive)"))
+            return self._decided(step, self._escalate(
+                "non-finite steps persist through "
+                f"{self.cfg.max_skips} skipped batches"))
         spiking = (self.ema_steps >= self.cfg.ema_warmup
                    and self.loss_ema is not None
                    and loss > self.cfg.spike_factor * self.loss_ema)
         if spiking:
             self.consecutive_spikes += 1
             self.healthy_streak = 0
+            self._m["spikes"].inc()
+            self._tracer.instant("resilience/loss_spike", step=step,
+                                 loss=float(loss), ema=float(self.loss_ema),
+                                 consecutive=self.consecutive_spikes)
             if self.consecutive_spikes <= self.cfg.spike_patience:
                 return Action("ok",
                               f"loss spike {loss:.3g} vs EMA "
                               f"{self.loss_ema:.3g} ({self.consecutive_spikes}"
                               f"/{self.cfg.spike_patience})")
-            return self._escalate(
+            return self._decided(step, self._escalate(
                 f"loss diverged: {loss:.3g} > {self.cfg.spike_factor:g}x "
                 f"EMA {self.loss_ema:.3g} for "
-                f"{self.cfg.spike_patience} steps")
+                f"{self.cfg.spike_patience} steps"))
         # healthy step: update the divergence reference, heal the ladder
         self.consecutive_bad = 0
         self.consecutive_spikes = 0
@@ -220,6 +257,22 @@ class ResilienceManager:
                      f"rollback budget healed")
             self.n_rollbacks = 0
         return Action("ok")
+
+    def _decided(self, step: int, action: Action) -> Action:
+        """Record a non-ok ladder decision: rung counter, before/after
+        gauges, and a structured instant carrying the full decision."""
+        self._m["actions"].inc(1, (action.kind,))
+        if action.lr_factor != 1.0:
+            self._m["lr_cuts"].inc()
+        self._m["lr_scale"].set(self.lr_scale)
+        self._m["rollback_budget"].set(self.n_rollbacks)
+        self._tracer.instant(f"resilience/{action.kind}", step=step,
+                             reason=action.reason,
+                             lr_factor=action.lr_factor,
+                             lr_scale=self.lr_scale,
+                             rollbacks=self.n_rollbacks,
+                             skips=self.n_skips)
+        return action
 
     def _escalate(self, reason: str) -> Action:
         self.consecutive_bad = 0
