@@ -102,7 +102,9 @@ class _DispatchSpy:
     ``check`` raises, failing the CI bench job."""
 
     def __init__(self):
-        self.counts = {"select_and_project": 0, "kernel": 0}
+        self.counts = {"select_and_project": 0, "kernel": 0,
+                       "newton_schulz": 0}
+        self.ns_shapes = []
 
     def __enter__(self):
         from repro.core import fused_step
@@ -111,6 +113,7 @@ class _DispatchSpy:
         self._fs, self._kops = fused_step, kops
         self._orig_sp = fused_step.select_and_project
         self._orig_op = kops.dct_project_op
+        self._orig_ns = kops.newton_schulz_op
 
         def sp(*a, **kw):
             self.counts["select_and_project"] += 1
@@ -120,13 +123,20 @@ class _DispatchSpy:
             self.counts["kernel"] += 1
             return self._orig_op(*a, **kw)
 
+        def ns(x, **kw):
+            self.counts["newton_schulz"] += 1
+            self.ns_shapes.append(tuple(x.shape))
+            return self._orig_ns(x, **kw)
+
         fused_step.select_and_project = sp
         kops.dct_project_op = op
+        kops.newton_schulz_op = ns
         return self
 
     def __exit__(self, *exc):
         self._fs.select_and_project = self._orig_sp
         self._kops.dct_project_op = self._orig_op
+        self._kops.newton_schulz_op = self._orig_ns
         return False
 
     def check(self, mode: str):
@@ -138,6 +148,28 @@ class _DispatchSpy:
             raise RuntimeError(
                 "fused mode 'on' never reached the Pallas dct_project "
                 "kernel through the chain API — dispatch regression")
+
+    def check_momentum(self, mode: str, rank, *, expect_select: bool = True):
+        """Gate for the NS families: the one-pass select must be reached
+        in any fused mode (when a subspace rank is set), and the Pallas
+        NS kernel under mode "on" — on rank-sized blocks only.
+        ``expect_select=False`` for dion, which has no column selection."""
+        if mode != "off" and rank is not None and expect_select \
+                and not self.counts["select_and_project"]:
+            raise RuntimeError(
+                f"fused mode {mode!r} never reached select_and_project "
+                f"through the chain API — dispatch regression")
+        if mode == "on":
+            if not self.counts["newton_schulz"]:
+                raise RuntimeError(
+                    "fused mode 'on' never reached the Pallas newton_schulz "
+                    "kernel through the chain API — dispatch regression")
+            if rank is not None:
+                for shape in self.ns_shapes:
+                    if min(shape[-2:]) != rank:
+                        raise RuntimeError(
+                            f"subspace NS ran on {shape}, not a "
+                            f"rank-{rank} block — fusion regression")
 
 
 def compile_opt_step(rule, shape, *, seed: int = 0, telemetry: bool = False,
@@ -258,11 +290,84 @@ def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
     result["speedup_fused_vs_reference"] = ref / fus if fus > 0 else None
     print(f"[optimizer_step] speedup fused/reference = "
           f"{result['speedup_fused_vs_reference']:.2f}x")
+    result["momentum"] = bench_momentum_step(layers=layers, dim=dim,
+                                             rank=rank, steps=steps,
+                                             warmup=warmup)
+    result["momentum_dispatch_gate"] = momentum_dispatch_gate()
     if out_path:
         with open(out_path, "w") as f:
             json.dump(result, f, indent=2)
         print(f"[optimizer_step] wrote {out_path}")
     return result
+
+
+def bench_momentum_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
+                        steps: int = 3, warmup: int = 1) -> dict:
+    """Subspace-fused muon/trion vs their seed paths (DESIGN.md §14).
+
+    muon's seed path is *full-space* Newton–Schulz on the (dim, dim)
+    momentum; the fused column projects into the selected rank-``rank``
+    subspace first, so NS runs on (dim, rank) blocks — the tentpole
+    speedup this record pins (>= 1.5x at the production shape). trion's
+    seed is already subspace, so its column isolates the one-pass
+    select + shared-gather fusion alone."""
+    from repro.kernels import ops as kops
+    from repro.optim.muon import MuonRule
+    from repro.optim.trion import TrionRule
+
+    shape = (layers, dim, dim)
+    fused_mode = "on" if kops.ON_TPU else "fft"
+    out = {"leaf_shape": list(shape), "rank": rank,
+           "fused_mode": fused_mode, "families": {}}
+    cases = (
+        ("muon", MuonRule(fused="off"),
+         MuonRule(rank=rank, fused=fused_mode)),
+        ("trion", TrionRule(rank=rank, fused="off"),
+         TrionRule(rank=rank, fused=fused_mode)),
+    )
+    for name, seed_rule, fused_rule in cases:
+        row_seed, _ = _time_opt_step(seed_rule, shape, steps=steps,
+                                     warmup=warmup)
+        row_fused, spy = _time_opt_step(fused_rule, shape, steps=steps,
+                                        warmup=warmup)
+        spy.check_momentum(fused_mode, rank)
+        sp = (row_seed["s_per_step"] / row_fused["s_per_step"]
+              if row_fused["s_per_step"] > 0 else None)
+        out["families"][name] = {"seed": row_seed, "fused": row_fused,
+                                 "speedup_fused_vs_seed": sp}
+        print(f"[optimizer_step] {name:10s} seed "
+              f"{row_seed['s_per_step'] * 1e3:9.1f} ms/step  fused "
+              f"{row_fused['s_per_step'] * 1e3:9.1f} ms/step  "
+              f"speedup {sp:.2f}x")
+    return out
+
+
+def momentum_dispatch_gate(shape=(2, 128, 128), rank: int = 16) -> dict:
+    """Hard-fail if muon/trion/dion stop reaching the fused kernels
+    through the chain API under mode "on" — and if the Newton–Schulz
+    they reach is no longer on rank-sized blocks (the tentpole shape
+    pin; tests/test_subspace_fusion.py holds the same line in-tree)."""
+    from repro.optim.dion import DionRule
+    from repro.optim.muon import MuonRule
+    from repro.optim.trion import TrionRule
+
+    counts = {}
+    for name, rule, expect_select in (
+            ("muon", MuonRule(rank=rank, fused="on"), True),
+            ("trion", TrionRule(rank=rank, fused="on"), True),
+            ("dion", DionRule(rank=rank, fused="on"), False)):
+        _, _, _, spy, _ = compile_opt_step(rule, shape)
+        try:
+            spy.check_momentum("on", rank, expect_select=expect_select)
+        except RuntimeError as e:
+            raise RuntimeError(
+                f"momentum family {name!r} no longer reaches the fused "
+                f"kernel path: {e}") from e
+        counts[name] = dict(spy.counts)
+        print(f"[optimizer_step] dispatch gate {name:10s} "
+              f"newton_schulz={spy.counts['newton_schulz']} "
+              f"select_and_project={spy.counts['select_and_project']}")
+    return counts
 
 
 def basis_dispatch_gate(kinds=("dct", "dst", "hadamard"),

@@ -39,13 +39,16 @@ import jax.numpy as jnp
 
 from repro.core.dct import makhoul_dct2
 from repro.core.error_feedback import QuantizedBuffer, dequantize_q8, quantize_q8
+from repro.core.newton_schulz import newton_schulz
 from repro.core.selection import (
+    allgather_rows,
     allsum,
     back_project,
     column_norms,
     dual_back_project,
     dynamic_column_selection,
     gather_columns,
+    local_row_block,
     select_top_r,
 )
 from repro.kernels import ops
@@ -153,6 +156,39 @@ def fused_backproject(u_low: jax.Array, q: jax.Array, idx: jax.Array, *,
     if mode == "on":
         return ops.colgather_matmul_op(u_low, jnp.swapaxes(q, -1, -2), idx)
     return back_project(u_low, q, idx)
+
+
+# ---------------------------------------------------------------------------
+# Newton-Schulz on the low-rank factor (muon/trion subspace orthogonalization)
+# ---------------------------------------------------------------------------
+def fused_newton_schulz(b: jax.Array, *, steps: int, mode: str,
+                        gather_axes=None) -> jax.Array:
+    """Orthogonalize ``b`` via Newton-Schulz — Pallas kernel on the "on"
+    path, the seed jnp iteration otherwise (DESIGN.md §14).
+
+    ``b`` is the wide-or-tall factor the caller wants orthogonalized: the
+    (..., m, r) low-rank momentum factor on the subspace path (the kernel
+    runs r-sized Gram matrices — the paper's rank-sized NS claim), or the
+    full (..., m, n) moment for full-space muon.
+
+    ``gather_axes``: mesh axes the rows (dim -2) are sharded over inside a
+    ZeRO-1 shard_map. NS mixes *rows* through the Gram matrix, so unlike
+    the column statistic it cannot be completed by a psum — a psum of
+    per-shard partial Grams would round differently than the replicated
+    single-pass matmul and break the bit-exact sharded/replicated
+    contract. Instead the factor is all-gathered, every shard runs the
+    identical whole-matrix iteration, and each keeps only its own rows
+    (row-blocked consumers make the slice exact). The gathered factor is
+    (m, r) — r-sized, so the ZeRO communication term stays rank-sized
+    too.
+    """
+    block = b.shape[-2]
+    bf = allgather_rows(b, gather_axes)
+    if mode == "on":
+        o = ops.newton_schulz_op(bf, steps=steps)
+    else:
+        o = newton_schulz(bf, steps=steps)
+    return local_row_block(o, gather_axes, block)
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,47 @@ def allsum(x: jax.Array, axes) -> jax.Array:
     return jax.lax.psum(x, axes)
 
 
+def allgather_rows(x: jax.Array, axes) -> jax.Array:
+    """Concatenate the row blocks (dim -2) of ``x`` across the ZeRO shards.
+
+    Identity when ``axes`` is falsy (replicated path untouched). Inside a
+    shard_map whose row dim is split over ``axes`` (in the mesh-axis order
+    of the PartitionSpec), the tiled all-gather reassembles the *global*
+    row order — the exact inverse of the sharding split, so downstream
+    whole-matrix math (Newton-Schulz, QR) sees bitwise the same operand as
+    the replicated step. Complement of :func:`local_row_block`.
+    """
+    if not axes:
+        return x
+    out = x
+    # gather the innermost sharding axis first so the outermost axis ends
+    # up outermost in the reassembled row order, matching P((axes,)) layout
+    for a in reversed(axes):
+        out = jax.lax.all_gather(out, a, axis=out.ndim - 2, tiled=True)
+    return out
+
+
+def shard_index(axes) -> jax.Array:
+    """This device's linear position along ``axes`` (row-major, matching
+    the ``P(axes)`` block layout and :func:`allgather_rows` order)."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def local_row_block(x: jax.Array, axes, block: int) -> jax.Array:
+    """Slice this shard's ``block`` rows (dim -2) back out of a full-row
+    array — the inverse of :func:`allgather_rows`. Identity when ``axes``
+    is falsy. Because row-blocked elementwise/matmul consumers only read
+    their own rows, gather -> whole-matrix compute -> ``local_row_block``
+    keeps the sharded step bit-identical to replicated."""
+    if not axes:
+        return x
+    start = shard_index(axes) * block
+    return jax.lax.dynamic_slice_in_dim(x, start, block, axis=x.ndim - 2)
+
+
 def column_norms(s: jax.Array, ord: str = "l2") -> jax.Array:
     """Per-column ranking statistic of ``S`` over the row axis (-2).
 

@@ -15,6 +15,14 @@ The r x r polynomial between the two passes is a trivial jnp matmul (r <= 512
 -> <= 1 MB, negligible). HBM traffic per iteration: 2 reads + 1 write of X —
 vs 3 full-size matmuls of Muon's full-rank NS; this is the kernel-level
 realisation of the paper's "Newton-Schulz on the low-rank factor" claim.
+
+Inputs may carry arbitrary leading stacked-layer axes — ``(layers, r, m)``
+from scan-stacked models — which collapse into one leading *grid* dimension
+(same layout as kernels/dct_project.py), so every layer's iteration runs
+from a single kernel launch. This is what lets the subspace-fused
+muon/trion path (optim/muon.py, optim/trion.py via
+core/fused_step.fused_newton_schulz) orthogonalize stacked low-rank
+factors without a vmap wrapper around the pallas_call.
 """
 from __future__ import annotations
 
@@ -31,76 +39,89 @@ DEFAULT_BM = 512  # column-block of the wide factor
 
 
 def _gram_kernel(x_ref, out_ref, acc_ref, *, nk: int):
-    k = pl.program_id(0)
+    k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)
+    x = x_ref[0].astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, x.T, preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
     def _out():
-        out_ref[...] = acc_ref[...]
+        out_ref[0] = acc_ref[...]
 
 
 def _apply_kernel(x_ref, p_ref, out_ref, *, a: float):
-    x = x_ref[...].astype(jnp.float32)
-    out_ref[...] = (
-        a * x + jnp.dot(p_ref[...], x, preferred_element_type=jnp.float32)
+    x = x_ref[0].astype(jnp.float32)
+    out_ref[0] = (
+        a * x + jnp.dot(p_ref[0], x, preferred_element_type=jnp.float32)
     ).astype(out_ref.dtype)
 
 
 def _pad_cols(x, bm):
-    pad = -x.shape[1] % bm
-    return (jnp.pad(x, ((0, 0), (0, pad))) if pad else x), x.shape[1] + pad
+    pad = -x.shape[-1] % bm
+    return (jnp.pad(x, ((0, 0), (0, 0), (0, pad))) if pad else x), \
+        x.shape[-1] + pad
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
 def ns_iteration(x: jax.Array, *, bm: int = DEFAULT_BM,
                  interpret: bool = False) -> jax.Array:
-    """One fused NS5 iteration on wide ``x (r, m)``, r <= m."""
+    """One fused NS5 iteration on wide ``x (..., r, m)``, r <= m.
+
+    Leading axes (stacked layers) become the kernel's batch grid dim; the
+    (r, r) polynomial between the two passes is a batched jnp matmul.
+    """
     a, b, c = NS_COEFFS
-    r, m = x.shape
-    xp, mm = _pad_cols(x, bm)
+    *batch, r, m = x.shape
+    xb = x.reshape((-1, r, m))
+    nb = xb.shape[0]
+    xp, mm = _pad_cols(xb, bm)
     nk = mm // bm
 
     gram = pl.pallas_call(
         functools.partial(_gram_kernel, nk=nk),
-        grid=(nk,),
-        in_specs=[pl.BlockSpec((r, bm), lambda k: (0, k))],
-        out_specs=pl.BlockSpec((r, r), lambda k: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        grid=(nb, nk),
+        in_specs=[pl.BlockSpec((1, r, bm), lambda bi, k: (bi, 0, k))],
+        out_specs=pl.BlockSpec((1, r, r), lambda bi, k: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, r, r), jnp.float32),
         scratch_shapes=[pltpu.VMEM((r, r), jnp.float32)],
         interpret=interpret,
     )(xp)
 
-    poly = b * gram + c * jnp.dot(gram, gram, preferred_element_type=jnp.float32)
+    poly = b * gram + c * jnp.einsum("brs,bst->brt", gram, gram,
+                                     preferred_element_type=jnp.float32)
 
     y = pl.pallas_call(
         functools.partial(_apply_kernel, a=a),
-        grid=(nk,),
+        grid=(nb, nk),
         in_specs=[
-            pl.BlockSpec((r, bm), lambda k: (0, k)),
-            pl.BlockSpec((r, r), lambda k: (0, 0)),
+            pl.BlockSpec((1, r, bm), lambda bi, k: (bi, 0, k)),
+            pl.BlockSpec((1, r, r), lambda bi, k: (bi, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((r, bm), lambda k: (0, k)),
-        out_shape=jax.ShapeDtypeStruct((r, mm), x.dtype),
+        out_specs=pl.BlockSpec((1, r, bm), lambda bi, k: (bi, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((nb, r, mm), x.dtype),
         interpret=interpret,
     )(xp, poly)
-    return y[:, :m]
+    return y[:, :, :m].reshape((*batch, r, m))
 
 
 @functools.partial(jax.jit, static_argnames=("steps", "bm", "interpret", "eps"))
 def newton_schulz_pallas(x: jax.Array, *, steps: int = 5, bm: int = DEFAULT_BM,
                          eps: float = 1e-7, interpret: bool = False) -> jax.Array:
-    """Full NS orthogonalization of ``x (p, q)`` via the fused iteration."""
-    wide = x.shape[0] <= x.shape[1]
-    xw = x if wide else x.T
+    """Full NS orthogonalization of ``x (..., p, q)`` via the fused iteration.
+
+    Orientation is decided on the trailing two dims (global for the whole
+    stack — every layer of a stacked leaf shares the shape); normalization
+    is per-matrix Frobenius, matching core/newton_schulz.newton_schulz.
+    """
+    wide = x.shape[-2] <= x.shape[-1]
+    xw = x if wide else jnp.swapaxes(x, -1, -2)
     xf = xw.astype(jnp.float32)
-    xf = xf / (jnp.linalg.norm(xf) + eps)
+    xf = xf / (jnp.linalg.norm(xf, axis=(-2, -1), keepdims=True) + eps)
     for _ in range(steps):
         xf = ns_iteration(xf, bm=bm, interpret=interpret)
     out = xf.astype(x.dtype)
-    return out if wide else out.T
+    return out if wide else jnp.swapaxes(out, -1, -2)

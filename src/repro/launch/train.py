@@ -19,9 +19,16 @@ import sys
 import jax
 import jax.numpy as jnp
 
-# the presets built on ProjectedAdamRule — the ones --fused/--zero/the
-# adaptive controllers apply to (one definition; three flags check it)
+# the presets built on ProjectedAdamRule — the ones the adaptive
+# controllers apply to
 PROJECTED_ADAM_FAMILY = ("dct_adamw", "ldadamw", "galore", "frugal", "fira")
+# presets with a fused-step dispatch field (DESIGN.md §3/§14): the
+# projected-Adam family plus the momentum-orthogonalization rules
+FUSED_FAMILY = PROJECTED_ADAM_FAMILY + ("muon", "trion", "dion")
+# presets whose rule is unconditionally zero_shardable (DESIGN.md §9/§14);
+# galore/frugal join when --basis swaps their dense svd projector for a
+# registered basis backend
+ZERO_ALWAYS = ("dct_adamw", "muon", "trion", "dion")
 
 
 def build(argv=None):
@@ -30,12 +37,18 @@ def build(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-sized)")
     ap.add_argument("--optimizer", default="trion")
-    ap.add_argument("--rank", type=int, default=128)
+    ap.add_argument("--rank", type=int, default=None,
+                    help="subspace rank for the low-rank families "
+                         "(default 128); for muon the default is full-space "
+                         "Newton-Schulz and --rank opts into subspace "
+                         "orthogonalization (DESIGN.md §14)")
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--weight-decay", type=float, default=0.01)
     ap.add_argument("--fused", default=None,
                     choices=["auto", "on", "fft", "off"],
-                    help="fused-step dispatch for the projected-Adam family")
+                    help="fused-step dispatch for the projected-Adam family "
+                         "and muon/trion/dion (Pallas Newton-Schulz on the "
+                         "rank-sized subspace factor)")
     ap.add_argument("--basis", default=None,
                     choices=["dct", "dst", "hadamard", "randortho"],
                     help="predefined orthogonal basis backend for "
@@ -46,8 +59,9 @@ def build(argv=None):
                     help="ZeRO-1 partitioning of the low-rank optimizer "
                          "state across the data axes; the fused step runs "
                          "per-shard inside shard_map and updates are "
-                         "all-gathered (index-based projector, i.e. "
-                         "dct_adamw; >1 device; see docs/distributed.md)")
+                         "all-gathered (dct_adamw/muon/trion/dion, or "
+                         "galore/frugal with --basis; >1 device; see "
+                         "docs/distributed.md)")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--seq-len", type=int, default=512)
@@ -143,12 +157,18 @@ def main(argv=None) -> int:
     if args.resilient:
         # the ladder's LR-cut rung needs the injected lr_scale leaf
         opt_kw["lr_scale"] = True
-    if args.optimizer != "adamw":
-        opt_kw["rank"] = args.rank
+    if args.optimizer == "muon":
+        # muon defaults to full-space Newton-Schulz; an explicit --rank
+        # opts into subspace orthogonalization (DESIGN.md §14)
+        if args.rank is not None:
+            opt_kw["rank"] = args.rank
+    elif args.optimizer != "adamw":
+        opt_kw["rank"] = args.rank if args.rank is not None else 128
     if args.fused is not None:
-        if args.optimizer not in PROJECTED_ADAM_FAMILY:
-            raise SystemExit(f"--fused applies to the projected-Adam family "
-                             f"only, not {args.optimizer!r}")
+        if args.optimizer not in FUSED_FAMILY:
+            raise SystemExit(f"--fused applies to "
+                             f"{'/'.join(FUSED_FAMILY)}, "
+                             f"not {args.optimizer!r}")
         opt_kw["fused"] = args.fused
     if args.basis is not None:
         if args.optimizer == "dct_adamw":
@@ -164,13 +184,19 @@ def main(argv=None) -> int:
     zero_cfg = None
     mesh = None
     if args.zero != "off":
-        if args.optimizer != "dct_adamw":
-            # only index-based projectors are zero_shardable; the other
-            # family presets use power/svd and would silently keep every
-            # leaf replicated (same precedent as --adaptive-refresh)
-            raise SystemExit("--zero needs an index-based projector (dct); "
-                             "use --optimizer dct_adamw, not "
-                             f"{args.optimizer!r}")
+        zero_ok = (args.optimizer in ZERO_ALWAYS
+                   or (args.optimizer in ("galore", "frugal")
+                       and args.basis is not None))
+        if not zero_ok:
+            # every remaining combo keeps dense projector state
+            # (power/svd) whose refresh is not row-decomposable, or (fira)
+            # feeds psum'd norms into the update arithmetic — it would
+            # silently keep every leaf replicated, so fail loudly instead
+            raise SystemExit(
+                "--zero needs a ZeRO-shardable optimizer: "
+                f"{'/'.join(ZERO_ALWAYS)} (always), or galore/frugal with "
+                "--basis <dct|dst|hadamard|randortho>; "
+                f"{args.optimizer!r} would silently stay replicated")
         if adaptive:
             # a controller rebuild re-inits + migrates sharded state; that
             # composition is untested — fail loudly rather than subtly

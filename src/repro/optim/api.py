@@ -12,6 +12,12 @@ The predefined orthogonal basis is itself pluggable (DESIGN.md §10):
 (:func:`repro.core.transforms.backend_kinds`: dct/dst/hadamard/randortho)
 rides the identical fused/ZeRO/telemetry stack. Unknown kinds fail
 eagerly at construction with the allowed set in the message.
+
+The momentum-orthogonalization families ride the same stack (DESIGN.md
+§14): ``muon``/``trion``/``dion`` take ``fused=`` (Pallas Newton-Schulz
+on the rank-sized subspace factor; ``muon`` additionally takes ``rank=``
+to opt into subspace orthogonalization) and ``zero=`` (ZeRO-1 state
+partitioning, bit-identical to replicated).
 """
 from __future__ import annotations
 

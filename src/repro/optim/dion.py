@@ -10,8 +10,23 @@ Per 2D leaf (oriented, C <= R):
     O_t = P_t Q_t^T
     theta <- (1 - lr*wd) theta - lr * max(1, sqrt(R/C)) * O_t
 
-State per leaf: momentum M *plus* a per-layer projection matrix Q (C x r) —
+State per leaf: momentum M (stored *oriented*, projected dim last, so
+ZeRO-1 can row-shard it) *plus* a per-layer projection matrix Q (C x r) —
 exactly the extra memory (and rank-dependent QR runtime) the paper removes.
+
+``fused`` swaps the power-iteration orthonormalization: "off" keeps the
+seed QR; "on"/"fft" orthonormalize ``B Q`` by Newton-Schulz on the
+(rows, r) factor instead (SUMO's NS-for-QR substitution — PAPERS.md),
+which reaches the Pallas r-sized-Gram kernel on the "on" path. Both
+factors span the same subspace; NS returns the polar factor rather than
+QR's Q, orthonormal to the kernel's polynomial tolerance.
+
+ZeRO-1: ``R_t = B^T P`` contracts over the *row* dim, so unlike the
+selection families no psum'd column statistic suffices — the momentum sum
+``B`` is all-gathered, every shard runs the identical full computation,
+and each keeps its own rows of ``M_t``/``O_t`` (``Q_t`` comes out
+replicated, and stays so in the placement rules). Sharded updates are
+bit-identical to replicated.
 """
 from __future__ import annotations
 
@@ -21,7 +36,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .common import MatrixRule, Optimizer, Schedule, deorient, orient_right
+from repro.core import fused_step
+from repro.core.selection import allgather_rows, local_row_block
+
+from .common import (
+    MatrixRule,
+    Optimizer,
+    Schedule,
+    deorient,
+    orient_right,
+    oriented_dims,
+)
 from .transform import (
     GradientTransform,
     add_decayed_weights,
@@ -33,7 +58,7 @@ from .transform import (
 
 
 class DionLeaf(NamedTuple):
-    m: jax.Array  # full-size momentum
+    m: jax.Array  # full-size momentum, stored oriented
     q: jax.Array  # per-layer projection basis (C, r) — Dion's memory cost
 
 
@@ -42,51 +67,83 @@ class DionRule(MatrixRule):
     rank: int = 128
     mu: float = 0.95
     eps: float = 1e-8
+    ns_steps: int = 5
     needs_shared_basis: bool = False
+    fused: str = "auto"   # "off"/"auto"-off-TPU: seed QR; "on"/"fft": NS
+
+    def __post_init__(self):
+        if self.fused not in fused_step.FUSED_MODES:
+            raise ValueError(
+                f"unknown fused mode {self.fused!r}; allowed: "
+                f"{fused_step.FUSED_MODES}")
+        if isinstance(self.rank, int) and self.rank < 1:
+            raise ValueError(f"rank must be >= 1, got {self.rank}")
+
+    @property
+    def zero_shardable(self) -> bool:
+        """Row-shardable by gather-compute-slice: the whole step is
+        recomputed identically per shard from the all-gathered momentum
+        sum, which keeps sharded bitwise equal to replicated while still
+        cutting persistent optimizer bytes by (N-1)/N (DESIGN.md §14)."""
+        return True
 
     def init(self, shape, dtype):
-        *batch, m, n = shape
-        rows, cols = (m, n) if n <= m else (n, m)
+        *batch, _, _ = shape
+        rows, cols = oriented_dims(shape)
         r = min(self.rank, cols)
         eye = jnp.eye(cols, r, dtype=jnp.float32)
         return DionLeaf(
-            m=jnp.zeros(shape, jnp.float32),
+            m=jnp.zeros((*batch, rows, cols), jnp.float32),
             q=jnp.broadcast_to(eye, (*batch, cols, r)),
         )
 
     def update(self, g, state, param, ctx):
-        gf, transposed = orient_right(g.astype(jnp.float32))
-        mf, _ = orient_right(state.m)
-        rows, cols = gf.shape[-2], gf.shape[-1]
+        if ctx.oriented:        # ZeRO row block: already right-oriented
+            gf, transposed = g.astype(jnp.float32), False
+        else:
+            gf, transposed = orient_right(g.astype(jnp.float32))
+        g_rows, g_cols = oriented_dims(param.shape)
+        scale = max(1.0, (g_rows / g_cols) ** 0.5)
+        mode = fused_step.resolve(self.fused)
+        block = gf.shape[-2]
 
-        b_full = mf + gf
+        # gather -> identical full-row compute per shard -> slice local rows
+        b_full = allgather_rows(gf + state.m, ctx.axis)
         z = jnp.einsum("...mc,...cr->...mr", b_full, state.q)
-        p, _ = jnp.linalg.qr(z)                              # R x r orthonormal
+        if mode == "off":
+            p, _ = jnp.linalg.qr(z)                          # R x r orthonormal
+        else:
+            # SUMO-style: Newton-Schulz polar factor instead of QR —
+            # same column span, r-sized Gram matrices, Pallas on "on"
+            p = fused_step.fused_newton_schulz(z, steps=self.ns_steps,
+                                               mode=mode)
         r_t = jnp.einsum("...mc,...mr->...cr", b_full, p)
         new_m = b_full - (1.0 - self.mu) * jnp.einsum(
             "...mr,...cr->...mc", p, r_t)
         col_norm = jnp.linalg.norm(r_t, axis=-2, keepdims=True)
         q_t = r_t / (col_norm + self.eps)
         out = jnp.einsum("...mr,...cr->...mc", p, q_t)       # O_t
-        scale = max(1.0, (rows / cols) ** 0.5)
+        new_m = local_row_block(new_m, ctx.axis, block)
+        out = local_row_block(out, ctx.axis, block)
         d = deorient(scale * out, transposed)
-        return d, DionLeaf(m=deorient(new_m, transposed), q=q_t)
+        return d, DionLeaf(m=new_m, q=q_t)
 
 
 def dion_transform(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
-                   weight_decay: float = 0.01) -> GradientTransform:
+                   weight_decay: float = 0.01,
+                   fused: str = "auto") -> GradientTransform:
     """Matrix-leaf Dion pipeline for ``partition`` / ``inject_hyperparams``."""
-    rule = DionRule(rank=rank, mu=mu)
+    rule = DionRule(rank=rank, mu=mu, fused=fused)
     return chain(lowrank_project(rule), scale_by_learning_rate(lr),
                  add_decayed_weights(weight_decay, schedule=lr))
 
 
 def dion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
-         weight_decay: float = 0.01, b1: float = 0.9, b2: float = 0.999,
-         eps: float = 1e-8, label_fn=None,
+         weight_decay: float = 0.01, fused: str = "auto", b1: float = 0.9,
+         b2: float = 0.999, eps: float = 1e-8, label_fn=None, zero=None,
          lr_scale: bool = False) -> Optimizer:
-    rule = DionRule(rank=rank, mu=mu)
-    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps,
+    rule = DionRule(rank=rank, mu=mu, fused=fused)
+    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps, zero=zero,
               lr_scale=lr_scale)
     if label_fn is not None:
         kw["label_fn"] = label_fn

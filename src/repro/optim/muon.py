@@ -1,6 +1,22 @@
-"""Muon baseline (Jordan et al., 2024): orthogonalized momentum via
-Newton-Schulz on the *full-size* matrix — the compute/communication cost
-Trion's low-rank NS avoids.
+"""Muon (Jordan et al., 2024): orthogonalized momentum via Newton-Schulz —
+plus the paper/SUMO-style subspace-fused variant (DESIGN.md §14).
+
+``rank=None`` (default) is the full-space baseline: NS on the full
+(m, n) moment, bit-identical to the seed repo. ``rank=r`` projects the
+nesterov-adjusted moment into the dynamically selected DCT subspace via the
+one-pass select+project (core/fused_step.py), runs Newton-Schulz on the
+(rows, r) low-rank factor — r-sized Gram matrices instead of n-sized — and
+back-projects through the shared ``Q_r^T`` gather. At full rank
+(r = min(m, n)) this matches the full-space update up to NS's polynomial
+tolerance, because NS commutes with right-multiplication by an orthogonal
+matrix: ``NS(X Q) = NS(X) Q`` in exact arithmetic.
+
+Momentum is stored *oriented* (projected dim last) so ZeRO-1 can row-shard
+it; orientation is a transpose, so the stored values are bit-identical to
+the seed's param-shaped buffer. The rule is ``zero_shardable``: selection
+needs one psum'd column statistic, NS all-gathers the (rank-sized) factor
+and keeps local rows (see ``fused_step.fused_newton_schulz``), everything
+else is row-local — sharded updates are bit-identical to replicated.
 """
 from __future__ import annotations
 
@@ -10,9 +26,18 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.newton_schulz import newton_schulz
+from repro.core import fused_step
+from repro.core.selection import allsum, column_norms, select_top_r, topr_margin
+from repro.telemetry import stats as tstats
 
-from .common import MatrixRule, Optimizer, Schedule
+from .common import (
+    MatrixRule,
+    Optimizer,
+    Schedule,
+    deorient,
+    orient_right,
+    oriented_dims,
+)
 from .transform import (
     GradientTransform,
     add_decayed_weights,
@@ -22,48 +47,133 @@ from .transform import (
     scale_by_learning_rate,
 )
 
+_RANKING_NORMS = ("l1", "l2")
+
 
 class MuonLeaf(NamedTuple):
-    m: jax.Array
+    m: jax.Array  # momentum, stored oriented (projected dim last)
 
 
 @dataclasses.dataclass(frozen=True)
 class MuonRule(MatrixRule):
+    rank: int | None = None          # None = full-space NS (seed behaviour)
     mu: float = 0.95
     ns_steps: int = 5
     nesterov: bool = True
-    needs_shared_basis: bool = False
+    ranking_norm: str = "l2"
+    needs_shared_basis: bool = True  # basis_sizes() is () when rank is None
+    fused: str = "auto"              # fused-step dispatch (DESIGN.md §3)
+    emit_stats: bool = True          # SubspaceStats when rank is set and a
+    #   telemetry collector is installed; full-space muon has no subspace
+    #   to report on and emits nothing either way
+
+    def __post_init__(self):
+        if self.ranking_norm not in _RANKING_NORMS:
+            raise ValueError(
+                f"unknown ranking_norm {self.ranking_norm!r}; allowed: "
+                f"{_RANKING_NORMS}")
+        if self.fused not in fused_step.FUSED_MODES:
+            raise ValueError(
+                f"unknown fused mode {self.fused!r}; allowed: "
+                f"{fused_step.FUSED_MODES}")
+        if self.rank is not None and self.rank < 1:
+            raise ValueError(f"rank must be >= 1 or None, got {self.rank}")
+
+    @property
+    def zero_shardable(self) -> bool:
+        """Row-parallel given one psum'd column statistic (subspace path)
+        plus the rank-sized NS all-gather; full-space NS all-gathers the
+        moment. Either way sharded == replicated bitwise (DESIGN.md §14)."""
+        return True
+
+    def basis_sizes(self, shape) -> tuple:
+        return () if self.rank is None else (oriented_dims(shape)[1],)
 
     def init(self, shape, dtype):
-        return MuonLeaf(m=jnp.zeros(shape, jnp.float32))
+        *batch, _, _ = shape
+        rows, cols = oriented_dims(shape)
+        return MuonLeaf(m=jnp.zeros((*batch, rows, cols), jnp.float32))
 
     def update(self, g, state, param, ctx):
-        gf = g.astype(jnp.float32)
+        if ctx.oriented:        # ZeRO row block: already right-oriented
+            gf, transposed = g.astype(jnp.float32), False
+        else:
+            gf, transposed = orient_right(g.astype(jnp.float32))
         new_m = self.mu * state.m + gf
         ns_in = gf + self.mu * new_m if self.nesterov else new_m
-        o = newton_schulz(ns_in, steps=self.ns_steps)
-        rows, cols = sorted(g.shape[-2:], reverse=True)
+        # Muon's shape-aware step scale from the GLOBAL leaf shape: inside
+        # a ZeRO shard_map the gradient block's aspect ratio is
+        # shard-dependent but ``param`` is passed replicated
+        rows, cols = sorted(param.shape[-2:], reverse=True)
         scale = max(1.0, (rows / cols) ** 0.5)
-        return scale * o, MuonLeaf(m=new_m)
+        mode = fused_step.resolve(self.fused)
+
+        if self.rank is None:
+            o = fused_step.fused_newton_schulz(ns_in, steps=self.ns_steps,
+                                               mode=mode,
+                                               gather_axes=ctx.axis)
+            return scale * deorient(o, transposed), MuonLeaf(m=new_m)
+
+        r = min(self.rank, ns_in.shape[-1])
+        q = ctx.basis(ns_in.shape[-1], jnp.float32)
+        want_stats = ctx.wants_stats and self.emit_stats
+        if mode != "off":
+            sp = fused_step.select_and_project(
+                ns_in, q, r, norm=self.ranking_norm, mode=mode,
+                return_norms=want_stats, psum_axes=ctx.axis)
+            idx, b_low = sp[0], sp[1]
+            norms_sq = sp[2] if want_stats else None
+        else:
+            s = ns_in @ q
+            norms_sq = (allsum(column_norms(s, "l2"), ctx.axis)
+                        if want_stats or self.ranking_norm == "l2" else None)
+            rank_norms = (norms_sq if self.ranking_norm == "l2"
+                          else allsum(column_norms(s, self.ranking_norm),
+                                      ctx.axis))
+            idx = select_top_r(rank_norms, r)
+            b_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
+        o = fused_step.fused_newton_schulz(b_low, steps=self.ns_steps,
+                                           mode=mode, gather_axes=ctx.axis)
+        d = fused_step.fused_backproject(o, q, idx, mode=mode)
+
+        if want_stats:
+            col_e = jnp.take_along_axis(norms_sq, idx, axis=-1)
+            sel_sq = jnp.sum(col_e, axis=-1)
+            total_sq = jnp.sum(jax.lax.optimization_barrier(norms_sq),
+                               axis=-1)
+            batch = ns_in.shape[:-2]
+            ctx.record_stats(tstats.SubspaceStats(
+                captured_energy=tstats.captured_energy(sel_sq, total_sq),
+                topr_margin=topr_margin(norms_sq, r),
+                index_overlap=-jnp.ones(batch, jnp.float32),
+                ef_norm=jnp.zeros(batch, jnp.float32),
+                rank_utilization=tstats.rank_utilization(col_e)))
+
+        return scale * deorient(d, transposed), MuonLeaf(m=new_m)
 
 
-def muon_transform(lr: Schedule, *, mu: float = 0.95,
+def muon_transform(lr: Schedule, *, rank: int | None = None, mu: float = 0.95,
                    weight_decay: float = 0.01, ns_steps: int = 5,
-                   nesterov: bool = True) -> GradientTransform:
+                   nesterov: bool = True, ranking_norm: str = "l2",
+                   fused: str = "auto") -> GradientTransform:
     """Matrix-leaf Muon pipeline (orthogonalize -> -lr -> decay) for use
     inside ``partition`` / ``inject_hyperparams``."""
-    rule = MuonRule(mu=mu, ns_steps=ns_steps, nesterov=nesterov)
+    rule = MuonRule(rank=rank, mu=mu, ns_steps=ns_steps, nesterov=nesterov,
+                    ranking_norm=ranking_norm, fused=fused)
     return chain(lowrank_project(rule), scale_by_learning_rate(lr),
                  add_decayed_weights(weight_decay, schedule=lr))
 
 
-def muon(lr: Schedule, *, mu: float = 0.95, weight_decay: float = 0.01,
-         ns_steps: int = 5, nesterov: bool = True, b1: float = 0.9,
-         b2: float = 0.999, eps: float = 1e-8, label_fn=None,
+def muon(lr: Schedule, *, rank: int | None = None, mu: float = 0.95,
+         weight_decay: float = 0.01, ns_steps: int = 5, nesterov: bool = True,
+         ranking_norm: str = "l2", fused: str = "auto",
+         basis_mode: str = "stored", b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, label_fn=None, zero=None,
          lr_scale: bool = False) -> Optimizer:
-    rule = MuonRule(mu=mu, ns_steps=ns_steps, nesterov=nesterov)
-    kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps,
-              lr_scale=lr_scale)
+    rule = MuonRule(rank=rank, mu=mu, ns_steps=ns_steps, nesterov=nesterov,
+                    ranking_norm=ranking_norm, fused=fused)
+    kw = dict(weight_decay=weight_decay, basis_mode=basis_mode, b1=b1, b2=b2,
+              eps=eps, zero=zero, lr_scale=lr_scale)
     if label_fn is not None:
         kw["label_fn"] = label_fn
     return matrix_optimizer(rule, lr, **kw)

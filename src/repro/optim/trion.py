@@ -12,9 +12,28 @@ Per 2D leaf (oriented so the projected dim is last, size C <= R):
     O_t = o_t Q_t^T
     theta <- (1 - lr*wd) theta - lr * max(1, sqrt(R/C)) * O_t
 
-State per leaf: the momentum M (same shape as the param) — *no* per-layer
-projection matrix (the paper's memory win vs Dion); indices are recomputed
-each step and never persisted.
+State per leaf: the momentum M, stored *oriented* (projected dim last) so
+ZeRO-1 can row-shard it — *no* per-layer projection matrix (the paper's
+memory win vs Dion); indices are recomputed each step and never persisted.
+
+Execution dispatch (``fused`` field, DESIGN.md §3/§14): "on"/"fft" run the
+one-pass select+project (selection + b_t from one S pass), the Pallas
+Newton-Schulz on the (rows, r) factor, and both back-projections — the EF
+reconstruction ``b_t Q_t^T`` and the update ``o_t Q_t^T`` — through ONE
+shared ``Q_r^T`` gather (``colgather_matmul_dual``). "off" is the
+bit-identical seed path.
+
+ZeRO-1 (``zero_shardable``): trion shards by gather-compute-slice — the
+momentum sum ``B`` is all-gathered, every shard runs the identical
+whole-matrix step, and each keeps its own rows of ``M_t``/``O_t``. The
+cheaper psum'd-column-statistic scheme the projected-Adam family uses is
+NOT bitwise safe here: a blockwise psum rounds the ranking statistic
+differently (~1 ulp) than the replicated single-pass reduction, and
+trion's error feedback *attracts* boundary columns toward ties — each
+selected column's energy is damped by (1-mu) while its unselected
+neighbour's is not, so the top-r margin shrinks every step until a 1-ulp
+difference flips the selection. Gathering ``B`` makes sharded untied
+from reduction order and bit-identical to replicated by construction.
 """
 from __future__ import annotations
 
@@ -24,11 +43,25 @@ import jax
 import jax.numpy as jnp
 from typing import NamedTuple
 
+from repro.core import fused_step
 from repro.core.dct import makhoul_dct2
-from repro.core.newton_schulz import newton_schulz
-from repro.core.selection import back_project, dynamic_column_selection
+from repro.core.selection import (
+    allgather_rows,
+    column_norms,
+    dynamic_column_selection,
+    local_row_block,
+    topr_margin,
+)
+from repro.telemetry import stats as tstats
 
-from .common import MatrixRule, Optimizer, Schedule, deorient, orient_right
+from .common import (
+    MatrixRule,
+    Optimizer,
+    Schedule,
+    deorient,
+    orient_right,
+    oriented_dims,
+)
 from .transform import (
     GradientTransform,
     add_decayed_weights,
@@ -43,7 +76,7 @@ _DCT_METHODS = ("matmul", "fft")
 
 
 class TrionLeaf(NamedTuple):
-    m: jax.Array  # full-size momentum
+    m: jax.Array  # full-size momentum, stored oriented
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +88,10 @@ class TrionRule(MatrixRule):
     dct_method: str = "matmul"       # "matmul" (TPU/MXU) | "fft" (Makhoul)
     momentum_dtype: str = "float32"
     needs_shared_basis: bool = True
+    fused: str = "auto"              # fused-step dispatch (DESIGN.md §3):
+    #   "auto" (kernels on TPU, reference elsewhere) | "on" (Pallas kernels,
+    #   interpret off-TPU) | "fft" (Makhoul host fast path) | "off" (seed jnp)
+    emit_stats: bool = True
 
     def __post_init__(self):
         if self.ranking_norm not in _RANKING_NORMS:
@@ -65,43 +102,96 @@ class TrionRule(MatrixRule):
             raise ValueError(
                 f"unknown dct_method {self.dct_method!r}; allowed: "
                 f"{_DCT_METHODS}")
+        if self.fused not in fused_step.FUSED_MODES:
+            raise ValueError(
+                f"unknown fused mode {self.fused!r}; allowed: "
+                f"{fused_step.FUSED_MODES}")
         if isinstance(self.rank, int) and self.rank < 1:
             raise ValueError(f"rank must be >= 1, got {self.rank}")
 
+    @property
+    def zero_shardable(self) -> bool:
+        """Row-shardable by gather-compute-slice (see module docstring:
+        the EF tie-attractor rules out the psum'd-statistic scheme);
+        sharded is bitwise replicated by construction. DESIGN.md §14."""
+        return True
+
     def init(self, shape, dtype):
-        return TrionLeaf(m=jnp.zeros(shape, jnp.dtype(self.momentum_dtype)))
+        *batch, _, _ = shape
+        rows, cols = oriented_dims(shape)
+        return TrionLeaf(m=jnp.zeros((*batch, rows, cols),
+                                     jnp.dtype(self.momentum_dtype)))
 
     def update(self, g, state, param, ctx):
-        gf, transposed = orient_right(g.astype(jnp.float32))
-        mf, _ = orient_right(state.m.astype(jnp.float32))
-        rows, cols = gf.shape[-2], gf.shape[-1]
-        r = min(self.rank, cols)
-
-        b_full = mf + gf                                   # B_t
-        q = ctx.basis(cols, jnp.float32)
-        if self.dct_method == "fft":
-            s = makhoul_dct2(b_full)
+        if ctx.oriented:        # ZeRO row block: already right-oriented
+            gf, transposed = g.astype(jnp.float32), False
         else:
-            s = b_full @ q
-        idx, b = dynamic_column_selection(s, r, ord=self.ranking_norm)
-        low_rank_part = back_project(b, q, idx)            # b_t Q_t^T
+            gf, transposed = orient_right(g.astype(jnp.float32))
+        mf = state.m.astype(jnp.float32)     # stored oriented already
+        cols = gf.shape[-1]
+        r = min(self.rank, cols)
+        # global-shape scale: inside a ZeRO shard_map the local block's
+        # aspect ratio is shard-dependent, param is replicated
+        g_rows, g_cols = oriented_dims(param.shape)
+        scale = max(1.0, (g_rows / g_cols) ** 0.5)
+        mode = fused_step.resolve(self.fused)
+        want_stats = ctx.wants_stats and self.emit_stats
+
+        # ZeRO gather-compute-slice: reassemble the global momentum sum,
+        # run the identical whole-matrix step per shard (identity when
+        # replicated), keep local rows of M_t / O_t at the end
+        block = gf.shape[-2]
+        b_full = allgather_rows(mf + gf, ctx.axis)         # B_t
+        q = ctx.basis(cols, jnp.float32)
+        if mode != "off":
+            sp = fused_step.select_and_project(
+                b_full, q, r, norm=self.ranking_norm, mode=mode,
+                return_norms=want_stats)
+            idx, b = sp[0], sp[1]
+            norms_sq = sp[2] if want_stats else None
+        else:
+            if self.dct_method == "fft":
+                s = makhoul_dct2(b_full)
+            else:
+                s = b_full @ q
+            idx, b = dynamic_column_selection(s, r, ord=self.ranking_norm)
+            norms_sq = column_norms(s, "l2") if want_stats else None
+
+        o = fused_step.fused_newton_schulz(b, steps=self.ns_steps, mode=mode)
+        # both back-projections — EF reconstruction b_t Q_t^T and update
+        # o_t Q_t^T — share one Q_r^T gather
+        out, low_rank_part = fused_step.fused_dual_backproject(
+            o, b, q, idx, mode=mode)
         new_m = b_full - (1.0 - self.mu) * low_rank_part   # Alg.1 line 10
-        o = newton_schulz(b, steps=self.ns_steps)          # on R x r factor
-        out = back_project(o, q, idx)                      # O_t
-        scale = max(1.0, (rows / cols) ** 0.5)
+        new_m = local_row_block(new_m, ctx.axis, block)
+        out = local_row_block(out, ctx.axis, block)
+
+        if want_stats:
+            col_e = jnp.take_along_axis(norms_sq, idx, axis=-1)
+            sel_sq = jnp.sum(col_e, axis=-1)
+            total_sq = jnp.sum(jax.lax.optimization_barrier(norms_sq),
+                               axis=-1)
+            batch = b_full.shape[:-2]
+            ctx.record_stats(tstats.SubspaceStats(
+                captured_energy=tstats.captured_energy(sel_sq, total_sq),
+                topr_margin=topr_margin(norms_sq, r),
+                index_overlap=-jnp.ones(batch, jnp.float32),
+                ef_norm=jnp.sqrt(jnp.maximum(total_sq - sel_sq, 0.0)),
+                rank_utilization=tstats.rank_utilization(col_e)))
+
         d = deorient(scale * out, transposed)
-        new_m = deorient(new_m, transposed).astype(state.m.dtype)
-        return d, TrionLeaf(m=new_m)
+        return d, TrionLeaf(m=new_m.astype(state.m.dtype))
 
 
 def trion_transform(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
                     weight_decay: float = 0.01, ns_steps: int = 5,
                     ranking_norm: str = "l2", dct_method: str = "matmul",
-                    momentum_dtype: str = "float32") -> GradientTransform:
+                    momentum_dtype: str = "float32",
+                    fused: str = "auto") -> GradientTransform:
     """Matrix-leaf Trion pipeline for ``partition`` / ``inject_hyperparams``."""
     rule = TrionRule(rank=rank, mu=mu, ns_steps=ns_steps,
                      ranking_norm=ranking_norm, dct_method=dct_method,
-                     momentum_dtype=momentum_dtype)
+                     momentum_dtype=momentum_dtype, fused=fused)
     return chain(lowrank_project(rule), scale_by_learning_rate(lr),
                  add_decayed_weights(weight_decay, schedule=lr))
 
@@ -110,13 +200,14 @@ def trion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
           weight_decay: float = 0.01, ns_steps: int = 5,
           ranking_norm: str = "l2", dct_method: str = "matmul",
           momentum_dtype: str = "float32", basis_mode: str = "stored",
-          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-          label_fn=None, lr_scale: bool = False) -> Optimizer:
+          fused: str = "auto", b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, label_fn=None, zero=None,
+          lr_scale: bool = False) -> Optimizer:
     rule = TrionRule(rank=rank, mu=mu, ns_steps=ns_steps,
                      ranking_norm=ranking_norm, dct_method=dct_method,
-                     momentum_dtype=momentum_dtype)
+                     momentum_dtype=momentum_dtype, fused=fused)
     kw = dict(weight_decay=weight_decay, basis_mode=basis_mode,
-              b1=b1, b2=b2, eps=eps, lr_scale=lr_scale)
+              b1=b1, b2=b2, eps=eps, zero=zero, lr_scale=lr_scale)
     if label_fn is not None:
         kw["label_fn"] = label_fn
     return matrix_optimizer(rule, lr, **kw)

@@ -405,16 +405,24 @@ def opt_state_specs(opt_state, params, p_specs, *, zero=None, mesh=None):
             zinfo = (zero_mod, axes, n_shards)
 
     def _zero_partitioned(p, leaf_state):
-        """ProjAdamLeaf with index-typed projector state whose rows split
-        evenly — exactly the leaves the sharded update path claims."""
+        """Leaves the sharded update path claims (DESIGN.md §9/§14):
+        ProjAdamLeaf with index-typed projector state, plus the
+        momentum-orthogonalization families (muon/trion/dion — always
+        shardable by gather-compute-slice), whose rows split evenly."""
         if zinfo is None:
             return False
+        from repro.optim.dion import DionLeaf
+        from repro.optim.muon import MuonLeaf
         from repro.optim.projected_adam import ProjAdamLeaf
+        from repro.optim.trion import TrionLeaf
 
         zero_mod, axes, n_shards = zinfo
+        if not zero_mod.eligible(p.shape, n_shards):
+            return False
+        if isinstance(leaf_state, (MuonLeaf, TrionLeaf, DionLeaf)):
+            return True
         return (isinstance(leaf_state, ProjAdamLeaf)
-                and jnp.issubdtype(leaf_state.proj.dtype, jnp.integer)
-                and zero_mod.eligible(p.shape, n_shards))
+                and jnp.issubdtype(leaf_state.proj.dtype, jnp.integer))
 
     def leaf_specs(p, p_spec, leaf_state):
         if _zero_partitioned(p, leaf_state):

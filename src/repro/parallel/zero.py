@@ -28,14 +28,23 @@ the parameter's sharding happens lazily where ``apply_updates`` consumes
 it, which lets XLA overlap each leaf's gather with the next leaf's
 shard-local compute instead of serializing a collective per leaf.
 
-Scope: rules whose projector state is an *index set into the shared basis*
-(``MatrixRule.zero_shardable``) — any registered basis backend with a
+Scope (``MatrixRule.zero_shardable``): rules whose projector state is an
+*index set into the shared basis* — any registered basis backend with a
 row-decomposable energy statistic (``BasisBackend.zero_shardable``:
-dct / dst / hadamard / randortho), plus the identity-basis ``randperm``.
-Dense-basis projectors (svd / power / random) keep a per-matrix ``(n, r)``
-basis whose refresh is not row-decomposable (SVD needs all rows); those
-leaves — and any leaf whose oriented row count does not divide the shard
-count — fall back to the replicated update path unchanged.
+dct / dst / hadamard / randortho), plus the identity-basis ``randperm`` —
+and, since DESIGN.md §14, the momentum-orthogonalization families
+muon / trion / dion. Muon/trion add exactly one new cross-shard term
+beyond the psum'd column statistic: the Newton-Schulz all-gather of the
+*rank-sized* low-rank factor (NS mixes rows through its Gram matrix, so
+it is recomputed identically per shard from the gathered factor and each
+shard keeps its own output rows — see ``fused_step.fused_newton_schulz``).
+Dion all-gathers the full momentum sum (its ``B^T P`` contraction spans
+all rows) and re-slices; its per-layer ``q`` basis comes out replicated
+and is placed replicated (``state_specs``). Dense-basis projected-Adam
+projectors (svd / power / random) keep a per-matrix ``(n, r)`` basis whose
+refresh is not row-decomposable; those leaves — and any leaf whose
+oriented row count does not divide the shard count — fall back to the
+replicated update path unchanged.
 """
 from __future__ import annotations
 
@@ -160,7 +169,19 @@ def state_array_spec(param_shape, state_shape, axes: tuple[str, ...]) -> P:
 
 def state_specs(param_shape, state_tree, axes: tuple[str, ...]):
     """Per-array specs for a whole per-leaf state subtree (ProjAdamLeaf,
-    including a nested q8 ``QuantizedBuffer``)."""
+    including a nested q8 ``QuantizedBuffer``; MuonLeaf/TrionLeaf/DionLeaf).
+
+    Dion's per-layer basis ``q (..., cols, r)`` is special-cased to
+    replicate: it is computed from the all-gathered momentum sum (identical
+    on every shard), and on *square* leaves its ``cols`` dim would
+    otherwise be indistinguishable from a row dim and wrongly sharded.
+    """
+    from repro.optim.dion import DionLeaf  # lazy: avoids transform cycle
+
+    if isinstance(state_tree, DionLeaf):
+        return DionLeaf(
+            m=state_array_spec(param_shape, state_tree.m.shape, axes),
+            q=P())
     return jax.tree.map(
         lambda s: state_array_spec(param_shape, s.shape, axes), state_tree)
 

@@ -93,6 +93,7 @@ def test_custom_label_fn_routes_two_rules_through_partition():
     upd, state2 = opt.update(g, state, params)
     assert all(np.isfinite(np.asarray(u)).all()
                for u in __import__("jax").tree.leaves(upd))
-    # ProjAdam keeps low-rank moments; Muon keeps full-size momentum
+    # ProjAdam keeps low-rank moments; Muon keeps full-size momentum,
+    # stored oriented (projected dim last) so ZeRO can row-shard it
     assert state2.leaves["attn"]["attn"]["wq"].m.shape == (32, 4)  # oriented
-    assert state2.leaves["mlp"]["mlp"]["wi"].m.shape == (16, 48)
+    assert state2.leaves["mlp"]["mlp"]["wi"].m.shape == (48, 16)

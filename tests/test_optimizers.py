@@ -111,7 +111,8 @@ def test_trion_state_has_no_projection_matrices():
     state = opt.init(params)
     leaf = _leaf(state, "lowrank", "layer1", "kernel")
     assert isinstance(leaf, TrionLeaf)
-    assert leaf.m.shape == (D_IN, D_H)
+    # momentum stored oriented (projected dim last) so ZeRO can row-shard it
+    assert leaf.m.shape == (D_H, D_IN)
     # shared DCT basis stored once per distinct projected width; layer2's
     # (32, 4) min-dim is below the low-rank threshold -> full path, no basis
     assert set(state.bases) == {str(D_IN), str(D_H)}

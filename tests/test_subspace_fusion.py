@@ -1,0 +1,148 @@
+"""Subspace-fused muon/trion/dion: equivalence + dispatch pins (DESIGN.md §14).
+
+Two contracts:
+
+1. **Full-rank subspace == full-space.** With r = min(m, n) the selection
+   returns a permutation P of all columns, so the low-rank factor is
+   ``B Q P`` for orthogonal ``Q P`` — Newton–Schulz commutes with right
+   orthogonal factors (NS(XQ) = NS(X)Q) and the back-projection cancels
+   the permutation, so the subspace path must reproduce the full-space
+   update up to fp rounding (measured ~1e-8; pinned at 1e-6).  Trion at
+   full rank reduces to heavy-ball muon: its EF recursion
+   ``M_t = mu*(M_{t-1}+G_t)`` makes ``B_t`` follow muon's
+   nesterov=False momentum recursion exactly.
+
+2. **Dispatch.** When fused="on", muon/trion must reach the Pallas
+   kernels *through* partition/chain (PR-1-style spy — the regression the
+   CI bench also gates), and every Newton–Schulz call in the subspace
+   path must run on rank-sized blocks (min trailing dim == r), never on
+   the full (m, n) momentum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fused_step
+from repro.optim.api import get_optimizer
+
+L, M, N = 3, 24, 40
+
+
+def _params():
+    rng = np.random.default_rng(0)
+    return {
+        "w": jnp.asarray(rng.standard_normal((L, M, N)) * 0.3, jnp.float32),
+        "odd": jnp.asarray(rng.standard_normal((33, 20)) * 0.3, jnp.float32),
+    }
+
+
+def _grads(t, params):
+    r = np.random.default_rng(50 + t)
+    return {k: jnp.asarray(r.standard_normal(v.shape) * 0.05, jnp.float32)
+            for k, v in params.items()}
+
+
+def _run(opt, params, steps=3):
+    st = opt.init(params)
+    for t in range(steps):
+        u, st = jax.jit(opt.update)(_grads(t, params), st, params)
+    return u
+
+
+# ---------------------------------------------------------------------------
+# full-rank subspace == full-space (NS(XQ) = NS(X)Q through the whole chain)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused", ["off", "on"])
+def test_muon_fullrank_subspace_matches_fullspace(fused):
+    params = _params()
+    full = get_optimizer("muon", lr=1e-2, fused=fused)
+    sub = get_optimizer("muon", lr=1e-2, rank=max(M, N), fused=fused)
+    uf, us = _run(full, params), _run(sub, params)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(us[k]), np.asarray(uf[k]),
+                                   atol=1e-6, err_msg=f"fused={fused} {k}")
+
+
+@pytest.mark.parametrize("fused", ["off", "on"])
+def test_trion_fullrank_matches_heavyball_muon(fused):
+    """B_t = mu*B_{t-1} + G_t == muon's nesterov=False momentum, and at
+    full rank the EF reconstruction is exact, so updates coincide."""
+    params = _params()
+    mu = get_optimizer("muon", lr=1e-2, nesterov=False, fused=fused)
+    tr = get_optimizer("trion", lr=1e-2, rank=max(M, N), fused=fused)
+    um, ut = _run(mu, params), _run(tr, params)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(ut[k]), np.asarray(um[k]),
+                                   atol=1e-6, err_msg=f"fused={fused} {k}")
+
+
+# ---------------------------------------------------------------------------
+# dispatch spies: fused kernels reached THROUGH partition -> lowrank_project
+# ---------------------------------------------------------------------------
+def _spy(monkeypatch, record_shapes=False):
+    calls = {"select": 0, "ns": 0, "ns_shapes": []}
+    orig_sel = fused_step.select_and_project
+    orig_ns = fused_step.ops.newton_schulz_op
+
+    def sel_spy(*a, **kw):
+        calls["select"] += 1
+        return orig_sel(*a, **kw)
+
+    def ns_spy(x, **kw):
+        calls["ns"] += 1
+        calls["ns_shapes"].append(tuple(x.shape))
+        return orig_ns(x, **kw)
+
+    monkeypatch.setattr(fused_step, "select_and_project", sel_spy)
+    monkeypatch.setattr(fused_step.ops, "newton_schulz_op", ns_spy)
+    return calls
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("muon", {"rank": 8}),
+    ("trion", {"rank": 8}),
+])
+def test_fused_kernels_reached_through_partition(monkeypatch, name, kw):
+    """Hard-fails if muon/trion stop routing through the fused one-pass
+    select+project and the Pallas Newton–Schulz."""
+    calls = _spy(monkeypatch)
+    params = _params()
+    opt = get_optimizer(name, lr=1e-2, fused="on", **kw)
+    st = opt.init(params)
+    upd, _ = opt.update(_grads(0, params), st, params)  # unjitted: trace spies
+    assert calls["select"] > 0, f"{name}: select+project kernel not reached"
+    assert calls["ns"] > 0, f"{name}: newton_schulz kernel not reached"
+    for k in params:
+        assert np.isfinite(np.asarray(upd[k])).all()
+
+
+def test_dion_ns_for_qr_reached(monkeypatch):
+    """dion fused='on' substitutes NS for QR (SUMO) — the kernel must fire."""
+    calls = _spy(monkeypatch)
+    params = _params()
+    opt = get_optimizer("dion", lr=1e-2, rank=8, fused="on")
+    st = opt.init(params)
+    upd, _ = opt.update(_grads(0, params), st, params)
+    assert calls["ns"] > 0, "dion: newton_schulz kernel not reached"
+    for k in params:
+        assert np.isfinite(np.asarray(upd[k])).all()
+
+
+@pytest.mark.parametrize("name", ["muon", "trion", "dion"])
+def test_ns_runs_on_rank_sized_blocks(monkeypatch, name):
+    """The tentpole shape pin: every NS call in the subspace path sees a
+    rank-sized block — min trailing dim == r, never the full (m, n)."""
+    r = 8
+    calls = _spy(monkeypatch)
+    params = _params()
+    opt = get_optimizer(name, lr=1e-2, rank=r, fused="on")
+    st = opt.init(params)
+    opt.update(_grads(0, params), st, params)
+    assert calls["ns_shapes"], f"{name}: no NS calls recorded"
+    for shape in calls["ns_shapes"]:
+        assert min(shape[-2:]) == r, (
+            f"{name}: NS ran on {shape}, not a rank-{r} block")
+        assert max(shape[-2:]) < M * N, shape

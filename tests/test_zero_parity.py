@@ -180,6 +180,174 @@ def test_zero_parity():
     assert "zero reshard restore OK" in proc.stdout
 
 
+# ---------------------------------------------------------------------------
+# momentum-orthogonalization families (muon / trion / dion — DESIGN.md §14)
+# ---------------------------------------------------------------------------
+_SCRIPT_MOMENTUM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import tempfile
+
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+    from repro.optim.api import get_optimizer
+    from repro.parallel import sharding as sh
+    from repro.parallel.compat import set_mesh
+    from repro.parallel.zero import ZeroConfig
+    from repro.telemetry.stats import collect
+    from repro.train.checkpoint import CheckpointManager
+
+    mesh = make_mesh((2, 4), ("pod", "data"))     # N_dp = 8 over both axes
+    zcfg = ZeroConfig(mode="1")
+
+    params = {
+        "w":    jnp.zeros((3, 64, 48), jnp.float32),  # scan-stacked
+        "odd":  jnp.zeros((80, 33), jnp.float32),     # odd dims, rows first
+        "wide": jnp.zeros((33, 80), jnp.float32),     # transposed orientation
+        "bad":  jnp.zeros((36, 20), jnp.float32),     # 36 % 8 != 0 -> fallback
+        "norm": jnp.zeros((64,), jnp.float32),        # full-rank Adam route
+    }
+
+    def grads_for(t):
+        r = np.random.default_rng(100 + t)
+        return {k: jnp.asarray(r.standard_normal(v.shape), jnp.float32)
+                for k, v in params.items()}
+
+    # ---- 1. bit-identical updates: every family x fused off/on ------------
+    # muon both full-space (rank=None: NS on the all-gathered moment) and
+    # subspace (NS on the rank-sized factor); 6 steps so momentum-driven
+    # selection drift is exercised (trion's EF attracts boundary columns
+    # toward ties — the gather-compute-slice scheme must stay exact)
+    cases = [("muon", {}), ("muon", {"rank": 16}),
+             ("trion", {"rank": 16}), ("dion", {"rank": 16})]
+    for name, kw in cases:
+        for fused in ("off", "on"):
+            ref = get_optimizer(name, lr=0.01, fused=fused, **kw)
+            zo = get_optimizer(name, lr=0.01, fused=fused, zero=zcfg, **kw)
+            sr, sz = ref.init(params), zo.init(params)
+            with set_mesh(mesh):
+                for t in range(6):
+                    g = grads_for(t)
+                    ur, sr = jax.jit(ref.update)(g, sr, params)
+                    uz, sz = jax.jit(zo.update)(g, sz, params)
+                    for k in params:
+                        np.testing.assert_array_equal(
+                            np.asarray(ur[k]), np.asarray(uz[k]),
+                            err_msg=f"{name} kw={kw} fused={fused} "
+                                    f"step={t} leaf={k}")
+    print("momentum zero update parity OK")
+
+    # ---- 2. telemetry parity (subspace stats ride out of the shard_map) ---
+    for name, kw in [("muon", {"rank": 16}), ("trion", {"rank": 16})]:
+        ref = get_optimizer(name, lr=0.01, **kw)
+        zo = get_optimizer(name, lr=0.01, zero=zcfg, **kw)
+        g = grads_for(0)
+
+        def run(opt, st):
+            with collect() as col:
+                u, st = opt.update(g, st, params)
+            return u, st, col.tree()
+
+        with set_mesh(mesh):
+            _, _, tel_r = jax.jit(lambda s: run(ref, s))(ref.init(params))
+            _, _, tel_z = jax.jit(lambda s: run(zo, s))(zo.init(params))
+        assert set(tel_r) == set(tel_z) and tel_z, (name, sorted(tel_z))
+        for path in tel_r:
+            for f in tel_r[path]._fields:
+                np.testing.assert_allclose(
+                    np.asarray(getattr(tel_z[path], f)),
+                    np.asarray(getattr(tel_r[path], f)), atol=1e-5,
+                    err_msg=f"{name} telemetry {path}.{f}")
+    print("momentum zero telemetry parity OK")
+
+    # ---- 3. placement: oriented momentum row-shards; dion q replicates ----
+    for name, kw in [("muon", {"rank": 16}), ("trion", {"rank": 16}),
+                     ("dion", {"rank": 16})]:
+        zo = get_optimizer(name, lr=0.01, zero=zcfg, **kw)
+        with set_mesh(mesh):
+            st = zo.init(params)
+            p_specs = sh.params_specs(params, mesh)
+            o_specs = sh.opt_state_specs(st, params, p_specs, zero=zcfg,
+                                         mesh=mesh)
+            st_sh = jax.device_put(st, sh.named_shardings(o_specs, mesh))
+        for leafname in ("w", "odd", "wide"):
+            pl = st_sh.leaves[0]["lowrank"][leafname]
+            lead = (None,) * (pl.m.ndim - 2)
+            assert pl.m.sharding.spec == P(*lead, ("pod", "data"), None), (
+                name, leafname, pl.m.sharding.spec)
+            if hasattr(pl, "q"):
+                assert pl.q.sharding.spec == P(), (name, leafname,
+                                                   pl.q.sharding.spec)
+        # ineligible leaf (36 % 8 != 0) mirrors the param placement
+        bad = st_sh.leaves[0]["lowrank"]["bad"]
+        assert bad.m.sharding.spec == p_specs["bad"], bad.m.sharding.spec
+
+        def dev_bytes(tree, dev):
+            return sum(s.data.nbytes for x in jax.tree.leaves(tree)
+                       for s in x.addressable_shards if s.device == dev)
+
+        d0 = jax.devices()[0]
+        b_rep, b_sh = dev_bytes(st.leaves, d0), dev_bytes(st_sh.leaves, d0)
+        assert b_sh < b_rep / 2, (name, b_sh, b_rep)
+    print("momentum zero placement OK")
+
+    # ---- 4. sharded save -> restore on a DIFFERENT topology ---------------
+    zo = get_optimizer("trion", lr=0.01, rank=16, zero=zcfg)
+    with set_mesh(mesh):
+        st = zo.init(params)
+        p_specs = sh.params_specs(params, mesh)
+        o_specs = sh.opt_state_specs(st, params, p_specs, zero=zcfg,
+                                     mesh=mesh)
+        st_sh = jax.device_put(st, sh.named_shardings(o_specs, mesh))
+        for t in range(2):
+            _, st_sh = jax.jit(zo.update, donate_argnums=1)(
+                grads_for(t), st_sh, params)
+        st_rep = zo.init(params)
+        for t in range(2):
+            _, st_rep = jax.jit(zo.update)(grads_for(t), st_rep, params)
+
+    cm = CheckpointManager(tempfile.mkdtemp(prefix="zckm_"), keep=2)
+    cm.save(2, st_sh)                        # gathered, mesh-agnostic
+    mesh2 = make_mesh((4, 2), ("pod", "data"))
+    with set_mesh(mesh2):
+        target = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st_sh)
+        o_specs2 = sh.opt_state_specs(target, params,
+                                      sh.params_specs(params, mesh2),
+                                      zero=zcfg, mesh=mesh2)
+        st2 = cm.restore(2, target, shardings=sh.named_shardings(o_specs2,
+                                                                 mesh2))
+        u2, _ = jax.jit(zo.update)(grads_for(2), st2, params)
+        ur, _ = jax.jit(zo.update)(grads_for(2), st_rep, params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(u2[k]), np.asarray(ur[k]),
+                                      err_msg=f"post-reshard leaf={k}")
+    print("momentum zero reshard restore OK")
+""")
+
+
+def test_zero_parity_momentum_families():
+    """muon/trion/dion sharded updates bit-identical fp32 to replicated
+    (fused off and on, stacked/odd/transposed leaves), telemetry parity,
+    placement specs, and reshard-then-step (DESIGN.md §14)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT_MOMENTUM], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "momentum zero update parity OK" in proc.stdout
+    assert "momentum zero telemetry parity OK" in proc.stdout
+    assert "momentum zero placement OK" in proc.stdout
+    assert "momentum zero reshard restore OK" in proc.stdout
+
+
 def test_zero_shardable_gate():
     """Only index-based projectors shard, and the fira residual is
     excluded (its phi scaling would feed psum'd norms into the update)."""
@@ -194,6 +362,41 @@ def test_zero_shardable_gate():
                                  needs_shared_basis=False).zero_shardable
     assert not ProjectedAdamRule(projector="dct",
                                  residual="fira").zero_shardable
+
+    # momentum-orthogonalization families (DESIGN.md §14): all shardable —
+    # muon via psum'd ranking + rank-sized NS gather, trion/dion via full
+    # gather-compute-slice
+    from repro.optim.dion import DionRule
+    from repro.optim.muon import MuonRule
+    from repro.optim.trion import TrionRule
+
+    assert MuonRule().zero_shardable
+    assert MuonRule(rank=16).zero_shardable
+    assert TrionRule(rank=16).zero_shardable
+    assert DionRule(rank=16).zero_shardable
+
+
+def test_zero_cli_gate():
+    """--zero with a non-shardable optimizer must fail LOUDLY, not silently
+    keep every leaf replicated (the PR-9 regression: the old gate only
+    allowed dct_adamw and no-op'd everything else)."""
+    import pytest
+
+    from repro.launch.train import main
+
+    base = ["--arch", "phi3-mini-3.8b", "--smoke", "--steps", "1",
+            "--seq-len", "8", "--batch", "4", "--zero", "1"]
+    # ldadamw's power-iteration projector state is not row-decomposable
+    with pytest.raises(SystemExit, match="would silently stay replicated"):
+        main(base + ["--optimizer", "ldadamw"])
+    # galore/frugal only shard with an index-based predefined basis
+    with pytest.raises(SystemExit, match="would silently stay replicated"):
+        main(base + ["--optimizer", "galore"])
+    # muon/trion/dion pass the shardable gate — proven by tripping the
+    # NEXT gate (adaptive composition) instead of the shardable one
+    for name in ("muon", "trion", "dion"):
+        with pytest.raises(SystemExit, match="cannot be combined"):
+            main(base + ["--optimizer", name, "--adaptive-rank"])
 
 
 def test_zero_config_validation():
