@@ -161,6 +161,17 @@ def fused_backproject(u_low: jax.Array, q: jax.Array, idx: jax.Array, *,
 # ---------------------------------------------------------------------------
 # Newton-Schulz on the low-rank factor (muon/trion subspace orthogonalization)
 # ---------------------------------------------------------------------------
+
+# The Pallas NS kernel keeps an (r, r) Gram scratch and the (r, r)
+# polynomial block resident in VMEM, with r = min of the factor's trailing
+# dims — its documented envelope is r <= 512 (1 MB fp32 each). Rank-sized
+# factors always fit; full-space moments at production shapes (e.g.
+# 4096x4096 -> 64 MB) do not and would fail to compile on TPU, so past
+# this threshold dispatch degrades to the jnp iteration, whose full-size
+# matmuls XLA tiles fine.
+NS_PALLAS_MAX_RANK = 512
+
+
 def fused_newton_schulz(b: jax.Array, *, steps: int, mode: str,
                         gather_axes=None) -> jax.Array:
     """Orthogonalize ``b`` via Newton-Schulz — Pallas kernel on the "on"
@@ -169,7 +180,10 @@ def fused_newton_schulz(b: jax.Array, *, steps: int, mode: str,
     ``b`` is the wide-or-tall factor the caller wants orthogonalized: the
     (..., m, r) low-rank momentum factor on the subspace path (the kernel
     runs r-sized Gram matrices — the paper's rank-sized NS claim), or the
-    full (..., m, n) moment for full-space muon.
+    full (..., m, n) moment for full-space muon. The kernel handles
+    factors whose short side fits its VMEM envelope
+    (``NS_PALLAS_MAX_RANK``); larger full-space moments fall back to the
+    jnp iteration even when ``mode == "on"``.
 
     ``gather_axes``: mesh axes the rows (dim -2) are sharded over inside a
     ZeRO-1 shard_map. NS mixes *rows* through the Gram matrix, so unlike
@@ -184,7 +198,7 @@ def fused_newton_schulz(b: jax.Array, *, steps: int, mode: str,
     """
     block = b.shape[-2]
     bf = allgather_rows(b, gather_axes)
-    if mode == "on":
+    if mode == "on" and min(bf.shape[-2:]) <= NS_PALLAS_MAX_RANK:
         o = ops.newton_schulz_op(bf, steps=steps)
     else:
         o = newton_schulz(bf, steps=steps)

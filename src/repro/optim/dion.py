@@ -27,6 +27,12 @@ selection families no psum'd column statistic suffices — the momentum sum
 and each keeps its own rows of ``M_t``/``O_t`` (``Q_t`` comes out
 replicated, and stays so in the placement rules). Sharded updates are
 bit-identical to replicated.
+
+Telemetry: with a collector installed the rule emits ``SubspaceStats``
+like muon/trion — captured energy of span(P_t) from the ``R_t`` column
+norms, EF mass from ``M_t`` — with the ranking-specific fields (top-r
+margin, index overlap) at their -1 sentinel since Dion never ranks the
+full column set.
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import fused_step
 from repro.core.selection import allgather_rows, local_row_block
+from repro.telemetry import stats as tstats
 
 from .common import (
     MatrixRule,
@@ -70,6 +77,8 @@ class DionRule(MatrixRule):
     ns_steps: int = 5
     needs_shared_basis: bool = False
     fused: str = "auto"   # "off"/"auto"-off-TPU: seed QR; "on"/"fft": NS
+    emit_stats: bool = True  # SubspaceStats from the R_t factor when a
+    #   telemetry collector is installed (captured energy of span(P_t))
 
     def __post_init__(self):
         if self.fused not in fused_step.FUSED_MODES:
@@ -105,6 +114,7 @@ class DionRule(MatrixRule):
         g_rows, g_cols = oriented_dims(param.shape)
         scale = max(1.0, (g_rows / g_cols) ** 0.5)
         mode = fused_step.resolve(self.fused)
+        want_stats = ctx.wants_stats and self.emit_stats
         block = gf.shape[-2]
 
         # gather -> identical full-row compute per shard -> slice local rows
@@ -123,6 +133,25 @@ class DionRule(MatrixRule):
         col_norm = jnp.linalg.norm(r_t, axis=-2, keepdims=True)
         q_t = r_t / (col_norm + self.eps)
         out = jnp.einsum("...mr,...cr->...mc", p, q_t)       # O_t
+
+        if want_stats:
+            # P_t orthonormal => energy captured by span(P_t) is
+            # ||P^T B||_F^2 = ||R_t||_F^2; per-column energies of R_t play
+            # the role the selected column norms play for muon/trion. All
+            # terms derive from the gathered full matrices, so sharded
+            # telemetry matches replicated. Dion ranks nothing over the n
+            # columns, so margin/overlap stay at the -1 sentinel.
+            col_e = jnp.sum(r_t * r_t, axis=-2)
+            sel_sq = jnp.sum(col_e, axis=-1)
+            total_sq = jnp.sum(b_full * b_full, axis=(-2, -1))
+            batch = b_full.shape[:-2]
+            ctx.record_stats(tstats.SubspaceStats(
+                captured_energy=tstats.captured_energy(sel_sq, total_sq),
+                topr_margin=-jnp.ones(batch, jnp.float32),
+                index_overlap=-jnp.ones(batch, jnp.float32),
+                ef_norm=jnp.linalg.norm(new_m, axis=(-2, -1)),
+                rank_utilization=tstats.rank_utilization(col_e)))
+
         new_m = local_row_block(new_m, ctx.axis, block)
         out = local_row_block(out, ctx.axis, block)
         d = deorient(scale * out, transposed)
@@ -130,19 +159,19 @@ class DionRule(MatrixRule):
 
 
 def dion_transform(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
-                   weight_decay: float = 0.01,
+                   weight_decay: float = 0.01, ns_steps: int = 5,
                    fused: str = "auto") -> GradientTransform:
     """Matrix-leaf Dion pipeline for ``partition`` / ``inject_hyperparams``."""
-    rule = DionRule(rank=rank, mu=mu, fused=fused)
+    rule = DionRule(rank=rank, mu=mu, ns_steps=ns_steps, fused=fused)
     return chain(lowrank_project(rule), scale_by_learning_rate(lr),
                  add_decayed_weights(weight_decay, schedule=lr))
 
 
 def dion(lr: Schedule, *, rank: int = 128, mu: float = 0.95,
-         weight_decay: float = 0.01, fused: str = "auto", b1: float = 0.9,
-         b2: float = 0.999, eps: float = 1e-8, label_fn=None, zero=None,
-         lr_scale: bool = False) -> Optimizer:
-    rule = DionRule(rank=rank, mu=mu, fused=fused)
+         weight_decay: float = 0.01, ns_steps: int = 5, fused: str = "auto",
+         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, label_fn=None,
+         zero=None, lr_scale: bool = False) -> Optimizer:
+    rule = DionRule(rank=rank, mu=mu, ns_steps=ns_steps, fused=fused)
     kw = dict(weight_decay=weight_decay, b1=b1, b2=b2, eps=eps, zero=zero,
               lr_scale=lr_scale)
     if label_fn is not None:

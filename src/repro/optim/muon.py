@@ -16,7 +16,9 @@ it; orientation is a transpose, so the stored values are bit-identical to
 the seed's param-shaped buffer. The rule is ``zero_shardable``: selection
 needs one psum'd column statistic, NS all-gathers the (rank-sized) factor
 and keeps local rows (see ``fused_step.fused_newton_schulz``), everything
-else is row-local — sharded updates are bit-identical to replicated.
+else is row-local — sharded updates are bit-identical to replicated in
+the parity suite (exact column-energy ties could flip the psum'd
+selection; see ``zero_shardable``).
 """
 from __future__ import annotations
 
@@ -83,7 +85,12 @@ class MuonRule(MatrixRule):
     def zero_shardable(self) -> bool:
         """Row-parallel given one psum'd column statistic (subspace path)
         plus the rank-sized NS all-gather; full-space NS all-gathers the
-        moment. Either way sharded == replicated bitwise (DESIGN.md §14)."""
+        moment. Sharded == replicated bitwise under the parity suite:
+        muon's momentum is selection-independent, so the ~1-ulp rounding
+        difference between the blockwise psum and the replicated
+        single-pass reduction has no EF tie-attractor to latch onto
+        (unlike trion) — but at an *exact* column-energy tie the
+        selection could still flip between the two (DESIGN.md §14)."""
         return True
 
     def basis_sizes(self, shape) -> tuple:

@@ -26,7 +26,9 @@ import numpy as np
 import pytest
 
 from repro.core import fused_step
+from repro.core.newton_schulz import newton_schulz
 from repro.optim.api import get_optimizer
+from repro.telemetry.stats import collect
 
 L, M, N = 3, 24, 40
 
@@ -129,6 +131,94 @@ def test_dion_ns_for_qr_reached(monkeypatch):
     assert calls["ns"] > 0, "dion: newton_schulz kernel not reached"
     for k in params:
         assert np.isfinite(np.asarray(upd[k])).all()
+
+
+def test_ns_envelope_gate_falls_back_to_jnp(monkeypatch):
+    """fused='on' must never send a factor whose short side exceeds the
+    Pallas kernel's VMEM envelope (NS_PALLAS_MAX_RANK) through the kernel
+    — its (r, r) scratch would not fit VMEM at production full-space
+    shapes. Past the threshold dispatch degrades to the jnp iteration."""
+    def boom(x, **kw):
+        raise AssertionError(f"Pallas NS dispatched on {x.shape}")
+
+    monkeypatch.setattr(fused_step.ops, "newton_schulz_op", boom)
+    rng = np.random.default_rng(7)
+    big = jnp.asarray(
+        rng.standard_normal((fused_step.NS_PALLAS_MAX_RANK + 1,
+                             fused_step.NS_PALLAS_MAX_RANK + 8)) * 0.1,
+        jnp.float32)
+    out = fused_step.fused_newton_schulz(big, steps=3, mode="on")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(newton_schulz(big, steps=3)))
+
+
+def test_fullspace_muon_big_leaf_avoids_pallas_ns(monkeypatch):
+    """Full-space muon (rank=None) fused='on' on a production-sized leaf
+    must take the jnp fallback, not the rank-sized kernel."""
+    def boom(x, **kw):
+        raise AssertionError(f"Pallas NS dispatched on {x.shape}")
+
+    monkeypatch.setattr(fused_step.ops, "newton_schulz_op", boom)
+    rng = np.random.default_rng(8)
+    params = {"big": jnp.asarray(
+        rng.standard_normal((fused_step.NS_PALLAS_MAX_RANK + 4, 560)) * 0.1,
+        jnp.float32)}
+    opt = get_optimizer("muon", lr=1e-2, fused="on")
+    st = opt.init(params)
+    upd, _ = opt.update(_grads(0, params), st, params)
+    assert np.isfinite(np.asarray(upd["big"])).all()
+
+
+# ---------------------------------------------------------------------------
+# dion telemetry + ns_steps plumbing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused", ["off", "on"])
+def test_dion_emits_subspace_stats(fused):
+    """dion emits SubspaceStats like muon/trion: captured energy of
+    span(P_t) from the R_t column norms, ranking-only fields at the -1
+    sentinel."""
+    params = _params()
+    opt = get_optimizer("dion", lr=1e-2, rank=8, fused=fused)
+    st = opt.init(params)
+    with collect() as col:
+        opt.update(_grads(0, params), st, params)
+    tree = col.tree()
+    assert tree, "dion emitted no SubspaceStats"
+    for path, s in tree.items():
+        ce = np.asarray(s.captured_energy)
+        assert ((ce > 0) & (ce <= 1.0 + 1e-5)).all(), (path, ce)
+        assert (np.asarray(s.topr_margin) == -1).all(), path
+        assert (np.asarray(s.index_overlap) == -1).all(), path
+        assert (np.asarray(s.ef_norm) > 0).all(), path
+        ru = np.asarray(s.rank_utilization)
+        assert ((ru > 0) & (ru <= 1.0 + 1e-5)).all(), (path, ru)
+
+
+def test_dion_ns_steps_passthrough(monkeypatch):
+    """ns_steps reaches the fused NS call through both public
+    constructors (it used to be a DionRule-only field)."""
+    seen = []
+    orig = fused_step.fused_newton_schulz
+
+    def ns_spy(b, *, steps, **kw):
+        seen.append(steps)
+        return orig(b, steps=steps, **kw)
+
+    monkeypatch.setattr(fused_step, "fused_newton_schulz", ns_spy)
+    params = _params()
+    opt = get_optimizer("dion", lr=1e-2, rank=8, ns_steps=3, fused="on")
+    st = opt.init(params)
+    opt.update(_grads(0, params), st, params)
+    assert seen and set(seen) == {3}, seen
+
+    from repro.optim.api import get_transform
+    from repro.optim.common import Context
+    seen.clear()
+    tr = get_transform("dion", lr=1e-2, rank=8, ns_steps=2, fused="on")
+    st = tr.init(params)
+    ctx = Context(step=jnp.zeros((), jnp.int32), bases={})
+    tr.update(_grads(0, params), st, params, ctx)
+    assert seen and set(seen) == {2}, seen
 
 
 @pytest.mark.parametrize("name", ["muon", "trion", "dion"])

@@ -242,7 +242,8 @@ _SCRIPT_MOMENTUM = textwrap.dedent("""
     print("momentum zero update parity OK")
 
     # ---- 2. telemetry parity (subspace stats ride out of the shard_map) ---
-    for name, kw in [("muon", {"rank": 16}), ("trion", {"rank": 16})]:
+    for name, kw in [("muon", {"rank": 16}), ("trion", {"rank": 16}),
+                     ("dion", {"rank": 16})]:
         ref = get_optimizer(name, lr=0.01, **kw)
         zo = get_optimizer(name, lr=0.01, zero=zcfg, **kw)
         g = grads_for(0)
