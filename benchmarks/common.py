@@ -28,6 +28,28 @@ from repro.optim.api import get_optimizer
 from repro.train.steps import TrainState, make_train_step
 
 
+def platform_info() -> dict:
+    """Host/accelerator identity block stamped into every BENCH json
+    (DESIGN.md §15): perf records are only comparable within a platform,
+    so the schema carries which backend produced the numbers."""
+    import jaxlib
+    dev = jax.devices()[0]
+    return {
+        "jax_backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib.__version__,
+    }
+
+
+def write_bench_json(path: str, result: dict) -> None:
+    """Stamp the ``platform`` block and persist one BENCH record."""
+    result.setdefault("platform", platform_info())
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+
+
 def tiny_llama(d: int = 128, layers: int = 4, heads: int = 4,
                d_ff: int = 344, vocab: int = 512) -> ModelConfig:
     return ModelConfig(
@@ -295,8 +317,7 @@ def bench_projected_step(*, layers: int = 2, dim: int = 4096, rank: int = 256,
                                              warmup=warmup)
     result["momentum_dispatch_gate"] = momentum_dispatch_gate()
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=2)
+        write_bench_json(out_path, result)
         print(f"[optimizer_step] wrote {out_path}")
     return result
 

@@ -15,7 +15,6 @@ twiddle-free, so it should win by more than Makhoul does).
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -93,8 +92,8 @@ def run_transforms(rows: int = 512, n: int = 4096,
         f"hadamard FHT ({had['fast_s']:.4f}s) must beat its matmul " \
         f"({had['matmul_s']:.4f}s) at n={n}"
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=2)
+        from benchmarks.common import write_bench_json
+        write_bench_json(out_path, result)
         print(f"[basis_transforms] wrote {out_path}")
     return result
 

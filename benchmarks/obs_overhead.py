@@ -28,7 +28,6 @@ must grow during enabled waves and stay frozen during disabled ones.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -223,8 +222,8 @@ def run(*, waves: int = 6, serve_new_tokens: int = 24,
           f"{train['s_per_step_on_min'] * 1e3:.2f} ms/step "
           f"({train_frac * 100:+.2f}%, gate {train_threshold * 100:.0f}%)")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=2)
+        from benchmarks.common import write_bench_json
+        write_bench_json(out_path, result)
         print(f"[obs_overhead] wrote {out_path}")
     failures = []
     if serve_frac > serve_threshold:

@@ -119,6 +119,9 @@ def main(argv=None):
     ap.add_argument("--adaptive-rank", action="store_true",
                     help="run the rank-allocator controller dry-run instead "
                          "of the per-optimizer HLO table")
+    ap.add_argument("--device-arch", default=None,
+                    help="accelerator roofline table (repro.roofline.hw); "
+                         "--arch is the model, this is the device")
     args = ap.parse_args(argv)
 
     if args.adaptive_rank:
@@ -159,7 +162,8 @@ def main(argv=None):
                 grads_in, state_in, params_in).compile()
         rep = analyze_compiled(compiled, arch=args.arch, shape="opt_only",
                                mesh_name="pod1x16x16", n_devices=mesh.size,
-                               model_flops_total=0.0)
+                               model_flops_total=0.0,
+                               device_arch=args.device_arch)
         coll = rep.collectives.get("_total", {"bytes": 0, "count": 0})
         print(f"{name:12s} flops/dev={rep.flops_per_device:.3e} "
               f"bytes/dev={rep.bytes_per_device:.3e} "

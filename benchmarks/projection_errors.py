@@ -191,6 +191,65 @@ def run_basis_errors(steps: int = 10, rank: int = 16) -> dict:
     return result
 
 
+def run_lowp_errors(steps: int = 10, rank: int = 16) -> dict:
+    """Low-precision projection-matmul error gate (DESIGN.md §15).
+
+    For every ``compute_dtype`` in ``COMPUTE_DTYPES``, runs the fused
+    select+project on the same App. F gradient stream as ``run`` and
+    measures, against the fp32 path: (a) the relative Frobenius error of
+    the transform ``S = G Q`` and (b) the top-r selection overlap
+    ``|idx_lowp ∩ idx_fp32| / r``. Asserts the error stays inside the
+    documented ``LOWP_ERROR_BOUNDS`` and the selection overlap stays
+    >= ``MIN_OVERLAP`` — the bound that licenses running the projection
+    matmuls in bf16/int8 (kernels/lowp.py).
+    """
+    from repro.core.fused_step import (COMPUTE_DTYPES, LOWP_ERROR_BOUNDS,
+                                       select_and_project)
+    from repro.kernels.lowp import lowp_matmul
+
+    MIN_OVERLAP = 0.90
+    acc = {dt: {"err": 0.0, "overlap": 0.0, "count": 0}
+           for dt in COMPUTE_DTYPES}
+    dct = {}
+    for grads in _grad_stream(steps):
+        for name, g in grads.items():
+            n = g.shape[1]
+            r = min(rank, n)
+            if name not in dct:
+                dct[name] = dct2_matrix(n, jnp.float32)
+            q = dct[name]
+            s_ref = g @ q
+            idx_ref, _ = select_and_project(g, q, r, mode="off")
+            ref_set = set(map(int, idx_ref.reshape(-1)))
+            nrm = float(jnp.linalg.norm(s_ref)) or 1.0
+            for dt in COMPUTE_DTYPES:
+                s_dt = lowp_matmul(g, q, dt)
+                idx_dt, _ = select_and_project(g, q, r, mode="off",
+                                               compute_dtype=dt)
+                row = acc[dt]
+                row["err"] += float(jnp.linalg.norm(s_dt - s_ref)) / nrm
+                got = set(map(int, idx_dt.reshape(-1)))
+                row["overlap"] += len(got & ref_set) / max(len(ref_set), 1)
+                row["count"] += 1
+    result = {"bench": "lowp_errors", "rank": rank, "steps": steps,
+              "min_overlap": MIN_OVERLAP, "dtypes": {}}
+    for dt in COMPUTE_DTYPES:
+        row = acc[dt]
+        err = row["err"] / max(row["count"], 1)
+        overlap = row["overlap"] / max(row["count"], 1)
+        bound = LOWP_ERROR_BOUNDS[dt]
+        result["dtypes"][dt] = {"rel_err_mean": err,
+                                "selection_overlap_mean": overlap,
+                                "bound": bound}
+        print(f"[lowp_errors] {dt:5s} rel_err={err:.5f} "
+              f"(bound {bound}) overlap={overlap:.3f} "
+              f"(floor {MIN_OVERLAP})")
+        assert err <= bound + 1e-9, (dt, err, bound)
+        assert overlap >= MIN_OVERLAP, (dt, overlap)
+    return result
+
+
 if __name__ == "__main__":
     run()
     run_basis_errors()
+    run_lowp_errors()

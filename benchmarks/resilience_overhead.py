@@ -39,7 +39,6 @@ layer stops being reached with the guard on (dispatch-spy regression).
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -171,8 +170,8 @@ def run(*, layers: int = 2, dim: int = 4096, rank: int = 256,
           f"gates: {threshold * 100:.0f}% flops/bytes, "
           f"{wall_threshold * 100:.0f}% wall)")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=2)
+        from benchmarks.common import write_bench_json
+        write_bench_json(out_path, result)
         print(f"[resilience_overhead] wrote {out_path}")
     failures = [k for k, gate in (
         ("overhead_frac_flops", threshold),

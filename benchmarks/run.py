@@ -26,6 +26,19 @@ Sections:
                                          (≤2% gate) and train-loop wall
                                          (≤1% gate) ->
                                          BENCH_obs_overhead.json
+  tuned_kernels        DESIGN.md §15     roofline-pruned autotuner sweep:
+                                         tuned-vs-default block ratio per
+                                         kernel family (gate: tuned >=
+                                         default within noise) ->
+                                         BENCH_tuned_kernels.json
+  lowp_errors          DESIGN.md §15     bf16/int8 projection-matmul error
+                                         + selection overlap vs fp32 on
+                                         the App. F gradient stream (gate:
+                                         LOWP_ERROR_BOUNDS)
+
+``--tune-cache PATH`` preloads autotuned block sizes into the process-wide
+TuningCache before any section jits, so every kernel launched with
+``block=None`` resolves its tuned block (repro.tune; docs/tuning.md).
 """
 from __future__ import annotations
 
@@ -39,12 +52,22 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="fewer steps (CI smoke)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="autotuned block-size cache JSON to preload "
+                         "(repro.tune; must load before the first jit)")
     args = ap.parse_args(argv)
     steps = 15 if args.fast else 40
 
+    if args.tune_cache:
+        from repro.tune import tuning_cache
+        tuning_cache().load(args.tune_cache)
+        print(f"[bench] loaded tuning cache {args.tune_cache} "
+              f"({len(tuning_cache())} entries)")
+
     from . import (dct_adamw_vs_ldadamw, finetune, frugal_fira,
                    makhoul_vs_matmul, obs_overhead, projection_errors,
-                   serve_decode, telemetry_overhead, trion_vs_dion)
+                   serve_decode, telemetry_overhead, trion_vs_dion,
+                   tuned_kernels)
 
     sections = {
         "trion_vs_dion": lambda: trion_vs_dion.run(steps=steps),
@@ -104,6 +127,15 @@ def main(argv=None) -> int:
             train_threshold=0.10 if args.fast else 0.01,
             out_path=("BENCH_obs_overhead_fast.json" if args.fast
                       else "BENCH_obs_overhead.json")),
+        # autotuner sweep (fast mode: reduced CI grid + scratch path so the
+        # committed production-shape record isn't clobbered)
+        "tuned_kernels": lambda: tuned_kernels.run(
+            fast=args.fast,
+            iters=1 if args.fast else 3,
+            out_path=("BENCH_tuned_kernels_fast.json" if args.fast
+                      else "BENCH_tuned_kernels.json")),
+        "lowp_errors": lambda: projection_errors.run_lowp_errors(
+            steps=4 if args.fast else 10),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     failures = 0

@@ -15,7 +15,6 @@ Three claims, one JSON record (DESIGN.md §12):
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -151,7 +150,7 @@ def run(arch: str = "qwen2.5-32b", *, num_slots: int = 4,
           f"churn {result['tok_s_churn']:.1f} tok/s, "
           f"kernel dispatches at trace = {spy.count}")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=2)
+        from benchmarks.common import write_bench_json
+        write_bench_json(out_path, result)
         print(f"[serve_decode] wrote {out_path}")
     return result

@@ -18,7 +18,6 @@ boxes must not flap a 3 % comparison.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -112,8 +111,8 @@ def run(*, layers: int = 2, dim: int = 4096, rank: int = 256,
           f"bytes {result['overhead_frac_bytes'] * 100:+.2f}% "
           f"(gate: {threshold * 100:.0f}%)")
     if out_path:
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=2)
+        from benchmarks.common import write_bench_json
+        write_bench_json(out_path, result)
         print(f"[telemetry_overhead] wrote {out_path}")
     failures = [k for k in ("overhead_frac_min", "overhead_frac_flops",
                             "overhead_frac_bytes")

@@ -1,0 +1,108 @@
+"""Autotuned vs default kernel blocks -> BENCH_tuned_kernels.json.
+
+Runs the roofline-seeded autotuner (repro.tune) over one spec per kernel
+family, then records the tuned-vs-default wall-time ratio per entry. The
+gate: the tuned block must be at least as fast as the kernel's hardcoded
+default within a noise margin — the autotuner measures the default
+alongside the survivors and breaks ties toward it, so a slower "winner"
+can only mean the measurement harness itself regressed.
+
+Off-TPU the kernels run in interpret mode; absolute times are Pallas
+interpreter wall-clock and only the *ratio* is meaningful (the committed
+record carries the ``platform`` block so TPU regeneration is
+distinguishable). The CI ``tune`` job runs the reduced grid and also
+asserts the cache JSON round-trip.
+"""
+from __future__ import annotations
+
+from .common import write_bench_json
+
+#: tuned_s may exceed default_s by this factor before the gate fails
+#: (interpret-mode wall times on a shared CI box are noisy; the tuner's
+#: tie-break toward the default bounds the true regret at ~measurement
+#: noise)
+NOISE_MARGIN = 1.25
+
+
+def run(*, fast: bool = False, keep: int = 4, iters: int = 3,
+        warmup: int = 1, arch: str | None = None,
+        out_path: str | None = "BENCH_tuned_kernels.json",
+        cache_path: str | None = None) -> dict:
+    """Tune one entry per kernel family and persist the record.
+
+    ``fast`` sweeps the reduced CI grid (small shapes); the default sweeps
+    the production-shaped specs. ``cache_path`` additionally saves the
+    winning blocks as a ``--tune-cache`` JSON for launch/train.py and
+    benchmarks/run.py to load.
+    """
+    from repro.tune import FULL_SPECS, REDUCED_SPECS, TuningCache, tune_all
+
+    specs = REDUCED_SPECS if fast else FULL_SPECS
+    cache = TuningCache()   # fresh: the record reflects exactly this sweep
+    records = tune_all(specs, keep=keep, iters=iters, warmup=warmup,
+                       arch=arch, cache=cache, verbose=True)
+
+    rows = []
+    failures = []
+    for rec in records:
+        ratio = rec["best_s"] / max(rec["default_s"], 1e-12)
+        row = {
+            "kernel": rec["kernel"], "shape": rec["shape"],
+            "rank": rec["rank"], "dtype": rec["dtype"],
+            "bound": rec["bound"], "grid_size": rec["grid_size"],
+            "survivors": rec["survivors"],
+            "default_block": rec["default_block"],
+            "default_s": rec["default_s"],
+            "best_block": rec["best_block"], "best_s": rec["best_s"],
+            "tuned_over_default": ratio,
+            "speedup": rec["speedup"],
+        }
+        rows.append(row)
+        if ratio > NOISE_MARGIN:
+            failures.append(f"{rec['kernel']} {tuple(rec['shape'])}: tuned "
+                            f"{rec['best_s']:.4g}s vs default "
+                            f"{rec['default_s']:.4g}s (x{ratio:.2f} > "
+                            f"{NOISE_MARGIN})")
+        print(f"[tuned_kernels] {rec['kernel']:22s} {str(rec['shape']):16s}"
+              f" tuned/default x{ratio:.2f} "
+              f"({rec['best_block']} vs {rec['default_block']})")
+
+    result = {
+        "bench": "tuned_kernels",
+        "specs": "reduced" if fast else "full",
+        "noise_margin": NOISE_MARGIN,
+        "entries": rows,
+        "cache_entries": len(cache),
+        "gate_ok": not failures,
+    }
+    if cache_path:
+        cache.save(cache_path)
+        print(f"[tuned_kernels] wrote tuning cache {cache_path} "
+              f"({len(cache)} entries)")
+    if out_path:
+        write_bench_json(out_path, result)
+        print(f"[tuned_kernels] wrote {out_path}")
+    if failures:
+        raise RuntimeError("tuned block slower than default beyond noise "
+                           "margin:\n  " + "\n  ".join(failures))
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced CI grid (small shapes)")
+    ap.add_argument("--keep", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--device-arch", default=None,
+                    help="roofline arch table for pruning (repro.roofline."
+                         "hw); default: REPRO_ARCH env or v5e")
+    ap.add_argument("--out", default="BENCH_tuned_kernels.json")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="also save the winners as a loadable tuning cache")
+    args = ap.parse_args()
+    run(fast=args.fast, keep=args.keep, iters=args.iters,
+        arch=args.device_arch, out_path=args.out,
+        cache_path=args.tune_cache)

@@ -27,7 +27,6 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import argparse
-import json
 import time
 
 import jax
@@ -155,8 +154,8 @@ def main(argv=None):
                                   steps=args.steps),
     }
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(result, f, indent=2)
+        from benchmarks.common import write_bench_json
+        write_bench_json(args.out, result)
         print(f"[zero_shard] wrote {args.out}")
     return result
 

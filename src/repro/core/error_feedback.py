@@ -25,9 +25,13 @@ class QuantizedBuffer(NamedTuple):
 
 
 def quantize_q8(x: jax.Array) -> QuantizedBuffer:
+    from repro.kernels.lowp import q8_scale  # lockstep scale guard
+
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    # max(amax/127, tiny): a subnormal row would underflow amax/127 to 0.0
+    # and x / 0 poisons the payload with NaNs (kernels/lowp.py)
+    scale = q8_scale(amax)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return QuantizedBuffer(q=q, scale=scale)
 

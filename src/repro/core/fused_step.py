@@ -51,7 +51,8 @@ from repro.core.selection import (
     local_row_block,
     select_top_r,
 )
-from repro.kernels import ops
+from repro.kernels import lowp, ops
+from repro.kernels.lowp import COMPUTE_DTYPES, LOWP_ERROR_BOUNDS  # noqa: F401
 
 FUSED_MODES = ("auto", "off", "on", "fft")
 
@@ -89,7 +90,7 @@ def resolve(mode: str) -> str:
 def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
                        norm: str = "l2", mode: str,
                        return_norms: bool = False, psum_axes=None,
-                       backend=None):
+                       backend=None, compute_dtype: str = "fp32"):
     """Dynamic column selection + low-rank extraction in one ``G``-sized pass.
 
     Returns ``(idx (..., r), g_low (..., m, r))``. The kernel path fuses the
@@ -110,16 +111,29 @@ def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
     ZeRO-1 shard_map). The kernels see only the local row block; the
     column statistic is completed by one ``(n,)``-sized psum, so every
     shard selects the same indices.
+
+    ``compute_dtype`` in {"fp32", "bf16", "int8"} selects the matmul
+    precision (DESIGN.md §15): the kernel path passes it to dct_project;
+    the off/fft paths run the jnp mirror (``lowp.lowp_matmul``) instead of
+    the fast transform — there is no int8 FFT, and the mirror's exact
+    int32 accumulation keeps the two dispatch modes in lockstep. The
+    documented error bounds vs fp32 are ``LOWP_ERROR_BOUNDS``, gated on a
+    real gradient stream in benchmarks/projection_errors.py.
     """
+    lowp.check_compute_dtype(compute_dtype)
     if mode == "on":
-        s, norms_sq = ops.dct_project_op(gf, q)
+        s, norms_sq = ops.dct_project_op(gf, q, compute_dtype=compute_dtype)
         norms_sq = allsum(norms_sq, psum_axes)
         rank_norms = (norms_sq if norm == "l2"
                       else allsum(column_norms(s, norm), psum_axes))
         idx = select_top_r(rank_norms, r)
         g_low = jnp.take_along_axis(s, idx[..., None, :], axis=-1)
         return (idx, g_low, norms_sq) if return_norms else (idx, g_low)
-    s = backend.apply_fast(gf, q) if backend is not None else makhoul_dct2(gf)
+    if compute_dtype != "fp32":
+        s = lowp.lowp_matmul(gf, q, compute_dtype)
+    else:
+        s = backend.apply_fast(gf, q) if backend is not None \
+            else makhoul_dct2(gf)
     if not return_norms and psum_axes is None:
         return dynamic_column_selection(s, r, ord=norm)
     norms_sq = allsum(column_norms(s, "l2"), psum_axes)
@@ -130,11 +144,13 @@ def select_and_project(gf: jax.Array, q: jax.Array, r: int, *,
     return (idx, g_low, norms_sq) if return_norms else (idx, g_low)
 
 
-def project_with_indices(gf: jax.Array, q: jax.Array,
-                         idx: jax.Array) -> jax.Array:
+def project_with_indices(gf: jax.Array, q: jax.Array, idx: jax.Array, *,
+                         compute_dtype: str = "fp32") -> jax.Array:
     """Keep-branch projection ``G @ Q[:, idx]`` for non-refresh steps
     (T_u > 1). A gather + skinny matmul — no full-width ``S`` pass."""
     qr = gather_columns(q, idx)
+    if compute_dtype != "fp32":
+        return lowp.lowp_matmul(gf, qr.astype(jnp.float32), compute_dtype)
     return jnp.einsum("...mn,...nr->...mr", gf, qr.astype(gf.dtype))
 
 
@@ -142,19 +158,30 @@ def project_with_indices(gf: jax.Array, q: jax.Array,
 # back-projection: both outputs from ONE Q_r^T gather
 # ---------------------------------------------------------------------------
 def fused_dual_backproject(u_low: jax.Array, g_low: jax.Array, q: jax.Array,
-                           idx: jax.Array, *, mode: str
+                           idx: jax.Array, *, mode: str,
+                           compute_dtype: str = "fp32"
                            ) -> tuple[jax.Array, jax.Array]:
     """``(u_low @ Q_r^T, g_low @ Q_r^T)`` sharing one ``Q_r^T`` gather."""
     if mode == "on":
         qt = jnp.swapaxes(q, -1, -2)
-        return ops.colgather_matmul_dual_op(u_low, g_low, qt, idx)
+        return ops.colgather_matmul_dual_op(u_low, g_low, qt, idx,
+                                            compute_dtype=compute_dtype)
+    if compute_dtype != "fp32":
+        d, recon = lowp.lowp_gather_matmul(
+            (u_low, g_low), jnp.swapaxes(q, -1, -2), idx, compute_dtype)
+        return d.astype(u_low.dtype), recon.astype(g_low.dtype)
     return dual_back_project(u_low, g_low, q, idx)
 
 
 def fused_backproject(u_low: jax.Array, q: jax.Array, idx: jax.Array, *,
-                      mode: str) -> jax.Array:
+                      mode: str, compute_dtype: str = "fp32") -> jax.Array:
     if mode == "on":
-        return ops.colgather_matmul_op(u_low, jnp.swapaxes(q, -1, -2), idx)
+        return ops.colgather_matmul_op(u_low, jnp.swapaxes(q, -1, -2), idx,
+                                       compute_dtype=compute_dtype)
+    if compute_dtype != "fp32":
+        (d,) = lowp.lowp_gather_matmul(
+            (u_low,), jnp.swapaxes(q, -1, -2), idx, compute_dtype)
+        return d.astype(u_low.dtype)
     return back_project(u_low, q, idx)
 
 

@@ -338,6 +338,12 @@ class BasisCache:
 
 _CACHE = BasisCache()
 
+# The second process-wide kernel-configuration cache lives alongside the
+# basis memo: tuned block sizes per (kernel, shape, rank, dtype, platform),
+# consulted by every Pallas entry point on ``block=None`` (DESIGN.md §15).
+# Re-exported here so "the caches" have one import home.
+from repro.tune.cache import TuningCache, tuning_cache  # noqa: E402,F401
+
 
 def basis_cache() -> BasisCache:
     """The process-wide cache instance (counters asserted in tests)."""

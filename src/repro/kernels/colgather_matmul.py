@@ -23,15 +23,32 @@ scan-stacked config produces).
 Grid ``(nb, nj, ni)`` — ``j`` after batch so the ``(n, bn)`` stripe of
 ``Q^T`` and its gathered ``(r, bn)`` scratch are built once per ``(b, j)``
 and reused across all row blocks ``i``.
+
+``block=None`` (the default) resolves through the process-wide
+:class:`~repro.tune.cache.TuningCache` — tuned block on a hit, the
+hardcoded ``DEFAULT_BLOCK`` on a miss (the bit-identical untuned path).
+
+``compute_dtype`` in {"fp32", "bf16", "int8"} selects the matmul precision
+(DESIGN.md §15). Because the gather selects *rows* of ``Q^T``, a
+per-column scale of the gathered matrix would depend on ``idx``; instead
+``Q^T`` is int8-quantized per-row pre-gather and those row scales are
+folded into ``b`` before ``b``'s own per-row quantization (kernels/lowp.py
+derivation), leaving one per-row epilogue scale — and an int8 gather
+scratch, 4x smaller in VMEM.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.tune.cache import resolve_block
+
+from .lowp import check_compute_dtype, quant_rows
 
 DEFAULT_BLOCK = (512, 256)  # (bm rows of b, bn output columns)
 
@@ -45,7 +62,8 @@ def _build_gather(idx_ref, bi, qt_ref, gather_ref, r: int):
     jax.lax.fori_loop(0, r, body, ())
 
 
-def _kernel(idx_ref, b_ref, qt_ref, out_ref, gather_ref, *, r: int):
+def _kernel(idx_ref, b_ref, qt_ref, out_ref, gather_ref, *, r: int,
+            cast=jnp.float32):
     bi = pl.program_id(0)
     i = pl.program_id(2)
 
@@ -53,14 +71,14 @@ def _kernel(idx_ref, b_ref, qt_ref, out_ref, gather_ref, *, r: int):
     def _gather():
         _build_gather(idx_ref, bi, qt_ref, gather_ref, r)
 
-    qr = gather_ref[...].astype(jnp.float32)
+    qr = gather_ref[...].astype(cast)
     out_ref[0] = jnp.dot(
-        b_ref[0].astype(jnp.float32), qr, preferred_element_type=jnp.float32
+        b_ref[0].astype(cast), qr, preferred_element_type=jnp.float32
     ).astype(out_ref.dtype)
 
 
 def _kernel_dual(idx_ref, b1_ref, b2_ref, qt_ref, o1_ref, o2_ref, gather_ref,
-                 *, r: int):
+                 *, r: int, cast=jnp.float32):
     bi = pl.program_id(0)
     i = pl.program_id(2)
 
@@ -68,13 +86,44 @@ def _kernel_dual(idx_ref, b1_ref, b2_ref, qt_ref, o1_ref, o2_ref, gather_ref,
     def _gather():
         _build_gather(idx_ref, bi, qt_ref, gather_ref, r)
 
-    qr = gather_ref[...].astype(jnp.float32)
+    qr = gather_ref[...].astype(cast)
     o1_ref[0] = jnp.dot(
-        b1_ref[0].astype(jnp.float32), qr, preferred_element_type=jnp.float32
+        b1_ref[0].astype(cast), qr, preferred_element_type=jnp.float32
     ).astype(o1_ref.dtype)
     o2_ref[0] = jnp.dot(
-        b2_ref[0].astype(jnp.float32), qr, preferred_element_type=jnp.float32
+        b2_ref[0].astype(cast), qr, preferred_element_type=jnp.float32
     ).astype(o2_ref.dtype)
+
+
+def _kernel_q8(idx_ref, b_ref, sb_ref, qt_ref, out_ref, gather_ref, *,
+               r: int):
+    """int8: gathered rows stay int8, exact int32 dot, per-row epilogue."""
+    bi = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _gather():
+        _build_gather(idx_ref, bi, qt_ref, gather_ref, r)
+
+    acc = jnp.dot(b_ref[0], gather_ref[...],
+                  preferred_element_type=jnp.int32)
+    out_ref[0] = (acc.astype(jnp.float32) * sb_ref[0]).astype(out_ref.dtype)
+
+
+def _kernel_dual_q8(idx_ref, b1_ref, s1_ref, b2_ref, s2_ref, qt_ref,
+                    o1_ref, o2_ref, gather_ref, *, r: int):
+    bi = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _gather():
+        _build_gather(idx_ref, bi, qt_ref, gather_ref, r)
+
+    qr = gather_ref[...]
+    a1 = jnp.dot(b1_ref[0], qr, preferred_element_type=jnp.int32)
+    o1_ref[0] = (a1.astype(jnp.float32) * s1_ref[0]).astype(o1_ref.dtype)
+    a2 = jnp.dot(b2_ref[0], qr, preferred_element_type=jnp.int32)
+    o2_ref[0] = (a2.astype(jnp.float32) * s2_ref[0]).astype(o2_ref.dtype)
 
 
 def _norm_operands(bs: tuple[jax.Array, ...], qt: jax.Array, idx: jax.Array):
@@ -91,69 +140,138 @@ def _norm_operands(bs: tuple[jax.Array, ...], qt: jax.Array, idx: jax.Array):
     return bb, idx2, tuple(batch), m, r, n
 
 
-def _call(bs, qt, idx, *, block, interpret, out_dtype):
+def _call(bs, qt, idx, *, block, interpret, out_dtype, compute_dtype):
     bb, idx2, batch, m, r, n = _norm_operands(bs, qt, idx)
     nb = bb[0].shape[0]
     out_dtype = out_dtype or bs[0].dtype
     bm, bn = block
     mp, np_ = (-m % bm), (-n % bn)
-    bp = tuple(jnp.pad(b, ((0, 0), (0, mp), (0, 0))) if mp else b for b in bb)
-    qtp = jnp.pad(qt, ((0, 0), (0, np_))) if np_ else qt
     mm, nn = m + mp, n + np_
     ni, nj = mm // bm, nn // bn
-
     nops = len(bs)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nb, nj, ni),
-        in_specs=[
-            *([pl.BlockSpec((1, bm, r), lambda b, j, i, idx_ref: (b, i, 0))]
-              * nops),
-            pl.BlockSpec((qt.shape[0], bn), lambda b, j, i, idx_ref: (0, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bm, bn), lambda b, j, i, idx_ref: (b, i, j))
-        ] * nops,
-        scratch_shapes=[pltpu.VMEM((r, bn), qt.dtype)],
-    )
-    kernel = _kernel if nops == 1 else _kernel_dual
-    outs = pl.pallas_call(
-        functools.partial(kernel, r=r),
-        grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((nb, mm, nn), out_dtype)] * nops,
-        interpret=interpret,
-    )(idx2, *bp, qtp)
+    out_shape = [jax.ShapeDtypeStruct((nb, mm, nn), out_dtype)] * nops
+    out_specs = [
+        pl.BlockSpec((1, bm, bn), lambda b, j, i, idx_ref: (b, i, j))
+    ] * nops
+
+    if compute_dtype == "int8":
+        qt_q, s_qt = quant_rows(qt)                   # (n, n) i8, (n, 1)
+        s_sel = jnp.take(s_qt[:, 0], idx2, axis=0)    # (nb, r)
+        ops_in, in_specs = [], []
+        for b in bb:
+            bq, sb = quant_rows(b.astype(jnp.float32) * s_sel[:, None, :])
+            if mp:
+                bq = jnp.pad(bq, ((0, 0), (0, mp), (0, 0)))
+                sb = jnp.pad(sb, ((0, 0), (0, mp), (0, 0)),
+                             constant_values=1.0)
+            ops_in += [bq, sb]
+            in_specs += [
+                pl.BlockSpec((1, bm, r), lambda b, j, i, idx_ref: (b, i, 0)),
+                pl.BlockSpec((1, bm, 1), lambda b, j, i, idx_ref: (b, i, 0)),
+            ]
+        qtp = jnp.pad(qt_q, ((0, 0), (0, np_))) if np_ else qt_q
+        in_specs.append(
+            pl.BlockSpec((n, bn), lambda b, j, i, idx_ref: (0, j)))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, nj, ni),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((r, bn), jnp.int8)],
+        )
+        kernel = _kernel_q8 if nops == 1 else _kernel_dual_q8
+        outs = pl.pallas_call(
+            functools.partial(kernel, r=r),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(idx2, *ops_in, qtp)
+    else:
+        cast = jnp.float32 if compute_dtype == "fp32" else jnp.bfloat16
+        bp = tuple(jnp.pad(b, ((0, 0), (0, mp), (0, 0))) if mp else b
+                   for b in bb)
+        qtp = jnp.pad(qt, ((0, 0), (0, np_))) if np_ else qt
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb, nj, ni),
+            in_specs=[
+                *([pl.BlockSpec((1, bm, r),
+                                lambda b, j, i, idx_ref: (b, i, 0))] * nops),
+                pl.BlockSpec((qt.shape[0], bn),
+                             lambda b, j, i, idx_ref: (0, j)),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((r, bn), qt.dtype)],
+        )
+        kernel = _kernel if nops == 1 else _kernel_dual
+        outs = pl.pallas_call(
+            functools.partial(kernel, r=r, cast=cast),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(idx2, *bp, qtp)
     return tuple(o[:, :m, :n].reshape((*batch, m, n)) for o in outs)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def _resolve(kernel: str, b: jax.Array, n: int, block):
+    if block is not None:
+        return tuple(block)
+    *batch, m, r = b.shape
+    return tuple(resolve_block(kernel, (math.prod(batch), m, n), r,
+                               b.dtype, DEFAULT_BLOCK))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype",
+                                             "compute_dtype"))
+def _colgather_matmul(b, qt, idx, *, block, interpret, out_dtype,
+                      compute_dtype):
+    (out,) = _call((b,), qt, idx, block=block, interpret=interpret,
+                   out_dtype=out_dtype, compute_dtype=compute_dtype)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype",
+                                             "compute_dtype"))
+def _colgather_matmul_dual(b1, b2, qt, idx, *, block, interpret, out_dtype,
+                           compute_dtype):
+    return _call((b1, b2), qt, idx, block=block, interpret=interpret,
+                 out_dtype=out_dtype, compute_dtype=compute_dtype)
+
+
 def colgather_matmul(
     b: jax.Array,
     qt: jax.Array,
     idx: jax.Array,
     *,
-    block: tuple[int, int] = DEFAULT_BLOCK,
+    block: tuple[int, int] | None = None,
     interpret: bool = False,
     out_dtype=None,
+    compute_dtype: str = "fp32",
 ) -> jax.Array:
     """``O[..., m, n] = b[..., m, r] @ qt[idx, :]``; ``qt`` is ``Q^T`` (n, n),
-    ``idx`` (..., r) int32 per-layer. Output dtype defaults to ``b.dtype``."""
-    (out,) = _call((b,), qt, idx, block=block, interpret=interpret,
-                   out_dtype=out_dtype)
-    return out
+    ``idx`` (..., r) int32 per-layer. Output dtype defaults to ``b.dtype``.
+    ``block=None`` resolves TuningCache -> ``DEFAULT_BLOCK``;
+    ``compute_dtype`` in {"fp32", "bf16", "int8"}."""
+    check_compute_dtype(compute_dtype)
+    block = _resolve("colgather_matmul", b, qt.shape[1], block)
+    return _colgather_matmul(b, qt, idx, block=block, interpret=interpret,
+                             out_dtype=out_dtype, compute_dtype=compute_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
 def colgather_matmul_dual(
     b1: jax.Array,
     b2: jax.Array,
     qt: jax.Array,
     idx: jax.Array,
     *,
-    block: tuple[int, int] = DEFAULT_BLOCK,
+    block: tuple[int, int] | None = None,
     interpret: bool = False,
     out_dtype=None,
+    compute_dtype: str = "fp32",
 ) -> tuple[jax.Array, jax.Array]:
     """``(b1 @ qt[idx, :], b2 @ qt[idx, :])`` sharing one index gather."""
-    return _call((b1, b2), qt, idx, block=block, interpret=interpret,
-                 out_dtype=out_dtype)
+    check_compute_dtype(compute_dtype)
+    block = _resolve("colgather_matmul_dual", b1, qt.shape[1], block)
+    return _colgather_matmul_dual(b1, b2, qt, idx, block=block,
+                                  interpret=interpret, out_dtype=out_dtype,
+                                  compute_dtype=compute_dtype)

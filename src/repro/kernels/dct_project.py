@@ -21,8 +21,20 @@ blocks) so the ``norms`` block for a given ``(b, j)`` stays resident in VMEM
 across the whole ``(i, k)`` sweep; ``k`` innermost for the standard
 accumulator pattern.
 
-Block shapes are multiples of the (8, 128) fp32 tile; the default 256^3 keeps
-the working set (G + Q + S tiles + fp32 acc + norms) around 1 MB of VMEM.
+``block=None`` (the default) resolves through the process-wide
+:class:`~repro.tune.cache.TuningCache` — tuned block on a hit, the
+hardcoded ``DEFAULT_BLOCK`` on a miss, so an untuned process is
+bit-identical to the pre-autotuner repo. Block shapes are multiples of the
+(8, 128) fp32 tile; the default 256^3 keeps the working set (G + Q + S
+tiles + fp32 acc + norms) around 1 MB of VMEM.
+
+``compute_dtype`` selects the matmul precision (DESIGN.md §15): "fp32"
+(the bit-identical default), "bf16" (operands cast, fp32 accumulation), or
+"int8" — per-row scales on ``G`` and per-column scales on ``Q`` (the
+quant_ef idiom, kernels/lowp.py), int8 MXU dot with exact int32
+accumulation, scales folded into the fp32 epilogue. The column norms are
+computed on the dequantized ``S``, so ranking sees the same values the
+selection slices.
 
 Under ZeRO-1 (DESIGN.md §9) the kernel is invoked *inside* a shard_map on a
 per-device row block ``(rows / N_dp, n)`` — row-blocking only shrinks the
@@ -34,16 +46,22 @@ communicates.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.tune.cache import resolve_block
+
+from .lowp import check_compute_dtype, quant_cols, quant_rows
+
 DEFAULT_BLOCK = (256, 256, 256)  # (bm, bn, bk)
 
 
-def _kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref, *, nk: int, out_dtype):
+def _kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref, *, nk: int, out_dtype,
+            cast=jnp.float32):
     i = pl.program_id(2)
     k = pl.program_id(3)
 
@@ -52,8 +70,8 @@ def _kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref, *, nk: int, out_dtype):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        g_ref[0].astype(jnp.float32),
-        q_ref[...].astype(jnp.float32),
+        g_ref[0].astype(cast),
+        q_ref[...].astype(cast),
         preferred_element_type=jnp.float32,
     )
 
@@ -72,22 +90,46 @@ def _kernel(g_ref, q_ref, s_ref, norms_ref, acc_ref, *, nk: int, out_dtype):
             norms_ref[0] += col
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
-def dct_project(
+def _kernel_q8(g_ref, q_ref, sg_ref, sq_ref, s_ref, norms_ref, acc_ref, *,
+               nk: int, out_dtype):
+    """int8 variant: exact int32 accumulation, scales folded in finalize."""
+    i = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(g_ref[0], q_ref[...],
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        # (bm, bn) = int32 acc * (bm, 1) row scales * (1, bn) column scales
+        acc = acc_ref[...].astype(jnp.float32) * sg_ref[0] * sq_ref[...]
+        s_ref[0] = acc.astype(out_dtype)
+        col = jnp.sum(acc * acc, axis=0, keepdims=True)
+
+        @pl.when(i == 0)
+        def _first():
+            norms_ref[0] = col
+
+        @pl.when(i > 0)
+        def _rest():
+            norms_ref[0] += col
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype",
+                                             "compute_dtype"))
+def _dct_project(
     g: jax.Array,
     q: jax.Array,
     *,
-    block: tuple[int, int, int] = DEFAULT_BLOCK,
-    interpret: bool = False,
-    out_dtype=None,
+    block: tuple[int, int, int],
+    interpret: bool,
+    out_dtype,
+    compute_dtype: str,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns ``(S, norms)``: ``S = G @ Q`` and fp32 squared-l2 column norms.
-
-    ``g``: (..., m, n); ``q``: (n, n) shared basis. Leading axes become the
-    kernel's batch grid dimension. Arbitrary shapes are zero-padded up to
-    block multiples (padded columns yield norm 0 and are sliced away).
-    Returns ``S (..., m, n)`` and ``norms (..., n)``.
-    """
     *batch, m, n = g.shape
     assert q.shape == (n, n), (g.shape, q.shape)
     out_dtype = out_dtype or g.dtype
@@ -95,29 +137,86 @@ def dct_project(
     nb = gb.shape[0]
     bm, bn, bk = block
     mp, np_, kp = (-m % bm), (-n % bn), (-n % bk)
-    gp = jnp.pad(gb, ((0, 0), (0, mp), (0, kp))) if mp or kp else gb
-    qp = jnp.pad(q, ((0, kp), (0, np_))) if kp or np_ else q
     mm, nn, kk = m + mp, n + np_, n + kp
     ni, nj, nk = mm // bm, nn // bn, kk // bk
+    grid = (nb, nj, ni, nk)
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, mm, nn), out_dtype),
+        jax.ShapeDtypeStruct((nb, 1, nn), jnp.float32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, bm, bn), lambda b, j, i, k: (b, i, j)),
+        pl.BlockSpec((1, 1, bn), lambda b, j, i, k: (b, 0, j)),
+    ]
 
-    s, norms = pl.pallas_call(
-        functools.partial(_kernel, nk=nk, out_dtype=out_dtype),
-        grid=(nb, nj, ni, nk),
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda b, j, i, k: (b, i, k)),
-            pl.BlockSpec((bk, bn), lambda b, j, i, k: (k, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bm, bn), lambda b, j, i, k: (b, i, j)),
-            pl.BlockSpec((1, 1, bn), lambda b, j, i, k: (b, 0, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nb, mm, nn), out_dtype),
-            jax.ShapeDtypeStruct((nb, 1, nn), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=interpret,
-    )(gp, qp)
+    if compute_dtype == "int8":
+        # quantize on the unpadded operands (exact full-row/column amax);
+        # int8 zero padding contributes 0 to the exact int32 accumulation
+        gq, sg = quant_rows(gb)                       # (nb, m, n), (nb, m, 1)
+        qq, sq = quant_cols(q)                        # (n, n), (1, n)
+        gp = jnp.pad(gq, ((0, 0), (0, mp), (0, kp))) if mp or kp else gq
+        qp = jnp.pad(qq, ((0, kp), (0, np_))) if kp or np_ else qq
+        sgp = jnp.pad(sg, ((0, 0), (0, mp), (0, 0)),
+                      constant_values=1.0) if mp else sg
+        sqp = jnp.pad(sq, ((0, 0), (0, np_)),
+                      constant_values=1.0) if np_ else sq
+        s, norms = pl.pallas_call(
+            functools.partial(_kernel_q8, nk=nk, out_dtype=out_dtype),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda b, j, i, k: (b, i, k)),
+                pl.BlockSpec((bk, bn), lambda b, j, i, k: (k, j)),
+                pl.BlockSpec((1, bm, 1), lambda b, j, i, k: (b, i, 0)),
+                pl.BlockSpec((1, bn), lambda b, j, i, k: (0, j)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+            interpret=interpret,
+        )(gp, qp, sgp, sqp)
+    else:
+        cast = jnp.float32 if compute_dtype == "fp32" else jnp.bfloat16
+        gp = jnp.pad(gb, ((0, 0), (0, mp), (0, kp))) if mp or kp else gb
+        qp = jnp.pad(q, ((0, kp), (0, np_))) if kp or np_ else q
+        s, norms = pl.pallas_call(
+            functools.partial(_kernel, nk=nk, out_dtype=out_dtype, cast=cast),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda b, j, i, k: (b, i, k)),
+                pl.BlockSpec((bk, bn), lambda b, j, i, k: (k, j)),
+            ],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(gp, qp)
     s = s[:, :m, :n].reshape((*batch, m, n))
     norms = norms[:, 0, :n].reshape((*batch, n))
     return s, norms
+
+
+def dct_project(
+    g: jax.Array,
+    q: jax.Array,
+    *,
+    block: tuple[int, int, int] | None = None,
+    interpret: bool = False,
+    out_dtype=None,
+    compute_dtype: str = "fp32",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns ``(S, norms)``: ``S = G @ Q`` and fp32 squared-l2 column norms.
+
+    ``g``: (..., m, n); ``q``: (n, n) shared basis. Leading axes become the
+    kernel's batch grid dimension. Arbitrary shapes are zero-padded up to
+    block multiples (padded columns yield norm 0 and are sliced away).
+    ``block=None`` resolves TuningCache -> ``DEFAULT_BLOCK`` (trace-time);
+    ``compute_dtype`` in {"fp32", "bf16", "int8"} selects matmul precision.
+    Returns ``S (..., m, n)`` and ``norms (..., n)``.
+    """
+    check_compute_dtype(compute_dtype)
+    if block is None:
+        *batch, m, n = g.shape
+        block = resolve_block("dct_project", (math.prod(batch), m, n), 0,
+                              g.dtype, DEFAULT_BLOCK)
+    return _dct_project(g, q, block=tuple(block), interpret=interpret,
+                        out_dtype=out_dtype, compute_dtype=compute_dtype)

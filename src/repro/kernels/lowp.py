@@ -1,0 +1,125 @@
+"""Low-precision compute helpers for the projection matmuls (DESIGN.md §15).
+
+Shared by the Pallas kernels (dct_project / colgather_matmul grow a
+``compute_dtype`` argument) and the jnp mirrors that serve the "off"/"fft"
+fused modes, so every dispatch mode quantizes with one formula.
+
+int8 epilogue math. The projection ``S = G @ Q`` runs as
+
+    S[i, j] ~= (sum_k Gq[i, k] * Qq[k, j]) * s_g[i] * s_q[j]
+
+with ``Gq = round(G / s_g)`` per-row and ``Qq = round(Q / s_q)`` per-column
+— the quant_ef idiom (symmetric linear, amax/127) applied to both operands.
+The int8 x int8 dot accumulates exactly in int32 (|sum| <= 127^2 * k < 2^31
+for every supported width), so the kernel and the jnp mirror produce
+bit-identical products; only the fp32 epilogue multiply rounds.
+
+The back-projection ``O = b @ Q^T[idx, :]`` gathers *rows* of ``Q^T``, so a
+per-column scale of the gathered matrix would depend on ``idx``. Instead
+``Q^T`` is quantized per-row once (pre-gather), and the row scales are
+folded into ``b`` before ``b``'s own per-row quantization:
+
+    O[i, j] = sum_k (b[i, k] * s_qt[idx[k]]) * Qtq[idx[k], j]
+            ~= (sum_k bq[i, k] * Qtq[idx[k], j]) * s_b[i]
+
+which leaves a single per-row epilogue scale — and the kernel gathers int8
+rows, shrinking the VMEM gather scratch 4x.
+
+Zero/subnormal rows: ``q8_scale`` clamps the scale at the smallest normal
+fp32 (`max(amax/127, tiny)`). An exactly-zero row quantizes to zeros either
+way; the clamp exists because a *subnormal* row makes ``amax/127``
+underflow to 0.0 and ``x / 0`` poison the payload with NaNs. All three EF
+quantizers (kernels/quant_ef.py, kernels/ref.py, core/error_feedback.py)
+use this same guard so the fused off/on/fft paths stay in lockstep.
+
+``LOWP_ERROR_BOUNDS`` are the documented relative-Frobenius error bounds of
+each compute path against fp32 — pinned by tests/test_tuning.py and gated
+on a real gradient stream in benchmarks/projection_errors.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPES = ("fp32", "bf16", "int8")
+
+#: relative Frobenius error ||lowp - fp32||_F / ||fp32||_F the compute paths
+#: stay within (measured headroom >= 2x on random + real gradient streams)
+LOWP_ERROR_BOUNDS = {"fp32": 0.0, "bf16": 0.01, "int8": 0.02}
+
+#: smallest normal fp32 — the per-row scale clamp
+F32_TINY = float(jnp.finfo(jnp.float32).tiny)
+
+
+def check_compute_dtype(compute_dtype: str) -> str:
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"unknown compute_dtype {compute_dtype!r}; "
+                         f"allowed: {COMPUTE_DTYPES}")
+    return compute_dtype
+
+
+def q8_scale(amax: jax.Array) -> jax.Array:
+    """amax -> symmetric int8 scale, clamped away from zero/subnormal."""
+    return jnp.maximum(amax / 127.0, F32_TINY)
+
+
+def quant_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row (last axis) symmetric int8: (..., m, n) -> int8 + (..., m, 1)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = q8_scale(amax)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quant_cols(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-column symmetric int8: (..., k, n) -> int8 + (..., 1, n)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-2, keepdims=True)
+    scale = q8_scale(amax)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# jnp mirrors — the "off"/"fft" fused modes run these so compute_dtype means
+# the same thing under every dispatch mode
+# ---------------------------------------------------------------------------
+def lowp_matmul(a: jax.Array, b: jax.Array, compute_dtype: str) -> jax.Array:
+    """``a (..., m, k) @ b (k, n)`` in the requested compute precision,
+    fp32 result. int8 matches the kernel path bit-for-bit on the integer
+    accumulation (int32 is exact)."""
+    check_compute_dtype(compute_dtype)
+    if compute_dtype == "fp32":
+        return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    if compute_dtype == "bf16":
+        return jnp.matmul(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32)
+    qa, sa = quant_rows(a)
+    qb, sb = quant_cols(b)
+    acc = jnp.matmul(qa.astype(jnp.int32), qb.astype(jnp.int32))
+    return acc.astype(jnp.float32) * sa * sb
+
+
+def lowp_gather_matmul(bs: tuple[jax.Array, ...], qt: jax.Array,
+                       idx: jax.Array, compute_dtype: str
+                       ) -> tuple[jax.Array, ...]:
+    """``(b @ qt[idx, :] for b in bs)`` sharing one gather, in the requested
+    compute precision; fp32 results. ``bs``: (..., m, r); ``qt``: (n, n);
+    ``idx``: (..., r)."""
+    check_compute_dtype(compute_dtype)
+    if compute_dtype != "int8":
+        cast = jnp.float32 if compute_dtype == "fp32" else jnp.bfloat16
+        gathered = jnp.take(qt, idx, axis=0).astype(cast)
+        return tuple(jnp.matmul(b.astype(cast), gathered,
+                                preferred_element_type=jnp.float32)
+                     for b in bs)
+    qt_q, s_qt = quant_rows(qt)                       # (n, n) i8, (n, 1)
+    gathered = jnp.take(qt_q, idx, axis=0)            # (..., r, n) i8
+    s_sel = jnp.take(s_qt[:, 0], idx, axis=0)         # (..., r)
+    outs = []
+    for b in bs:
+        bq, sb = quant_rows(b.astype(jnp.float32) * s_sel[..., None, :])
+        acc = jnp.matmul(bq.astype(jnp.int32), gathered.astype(jnp.int32))
+        outs.append(acc.astype(jnp.float32) * sb)
+    return tuple(outs)

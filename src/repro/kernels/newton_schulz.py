@@ -27,6 +27,7 @@ factors without a vmap wrapper around the pallas_call.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +35,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.newton_schulz import NS_COEFFS
+from repro.tune.cache import resolve_block
 
 DEFAULT_BM = 512  # column-block of the wide factor
+
+
+def _resolve_bm(shape, bm):
+    """``bm=None`` -> TuningCache -> ``DEFAULT_BM``; keyed on the
+    wide-oriented factor signature ``(nb, r, m)`` with rank ``r``."""
+    if bm is not None:
+        return int(bm)
+    *batch, r, m = shape
+    return int(resolve_block("newton_schulz", (math.prod(batch), r, m), r,
+                             "float32", DEFAULT_BM))
 
 
 def _gram_kernel(x_ref, out_ref, acc_ref, *, nk: int):
@@ -67,13 +79,7 @@ def _pad_cols(x, bm):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def ns_iteration(x: jax.Array, *, bm: int = DEFAULT_BM,
-                 interpret: bool = False) -> jax.Array:
-    """One fused NS5 iteration on wide ``x (..., r, m)``, r <= m.
-
-    Leading axes (stacked layers) become the kernel's batch grid dim; the
-    (r, r) polynomial between the two passes is a batched jnp matmul.
-    """
+def _ns_iteration(x: jax.Array, *, bm: int, interpret: bool) -> jax.Array:
     a, b, c = NS_COEFFS
     *batch, r, m = x.shape
     xb = x.reshape((-1, r, m))
@@ -108,20 +114,43 @@ def ns_iteration(x: jax.Array, *, bm: int = DEFAULT_BM,
     return y[:, :, :m].reshape((*batch, r, m))
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "bm", "interpret", "eps"))
-def newton_schulz_pallas(x: jax.Array, *, steps: int = 5, bm: int = DEFAULT_BM,
-                         eps: float = 1e-7, interpret: bool = False) -> jax.Array:
-    """Full NS orthogonalization of ``x (..., p, q)`` via the fused iteration.
+def ns_iteration(x: jax.Array, *, bm: int | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """One fused NS5 iteration on wide ``x (..., r, m)``, r <= m.
 
-    Orientation is decided on the trailing two dims (global for the whole
-    stack — every layer of a stacked leaf shares the shape); normalization
-    is per-matrix Frobenius, matching core/newton_schulz.newton_schulz.
+    Leading axes (stacked layers) become the kernel's batch grid dim; the
+    (r, r) polynomial between the two passes is a batched jnp matmul.
+    ``bm=None`` resolves TuningCache -> ``DEFAULT_BM``.
     """
+    return _ns_iteration(x, bm=_resolve_bm(x.shape, bm), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "bm", "interpret", "eps"))
+def _newton_schulz_pallas(x: jax.Array, *, steps: int, bm: int, eps: float,
+                          interpret: bool) -> jax.Array:
     wide = x.shape[-2] <= x.shape[-1]
     xw = x if wide else jnp.swapaxes(x, -1, -2)
     xf = xw.astype(jnp.float32)
     xf = xf / (jnp.linalg.norm(xf, axis=(-2, -1), keepdims=True) + eps)
     for _ in range(steps):
-        xf = ns_iteration(xf, bm=bm, interpret=interpret)
+        xf = _ns_iteration(xf, bm=bm, interpret=interpret)
     out = xf.astype(x.dtype)
     return out if wide else jnp.swapaxes(out, -1, -2)
+
+
+def newton_schulz_pallas(x: jax.Array, *, steps: int = 5,
+                         bm: int | None = None, eps: float = 1e-7,
+                         interpret: bool = False) -> jax.Array:
+    """Full NS orthogonalization of ``x (..., p, q)`` via the fused iteration.
+
+    Orientation is decided on the trailing two dims (global for the whole
+    stack — every layer of a stacked leaf shares the shape); normalization
+    is per-matrix Frobenius, matching core/newton_schulz.newton_schulz.
+    ``bm=None`` resolves TuningCache (keyed on the wide-oriented shape) ->
+    ``DEFAULT_BM``.
+    """
+    wide_shape = x.shape if x.shape[-2] <= x.shape[-1] else \
+        (*x.shape[:-2], x.shape[-1], x.shape[-2])
+    return _newton_schulz_pallas(x, steps=steps,
+                                 bm=_resolve_bm(wide_shape, bm), eps=eps,
+                                 interpret=interpret)

@@ -2,6 +2,11 @@
 
 ``interpret`` defaults to True off-TPU so the same call sites work in CPU
 tests and on real hardware (`repro.kernels.ops.ON_TPU`).
+
+The ``**kw`` passthrough is load-bearing for DESIGN.md §15: callers
+(fused_step) forward ``compute_dtype`` here, and an omitted ``block``
+leaves the kernels' ``block=None`` default in place, which resolves
+against the process-wide TuningCache at trace time (repro.tune).
 """
 from __future__ import annotations
 

@@ -16,10 +16,15 @@ scaling stay in registers/VMEM.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.tune.cache import resolve_block
+
+from .lowp import q8_scale
 
 DEFAULT_BM = 256  # rows per grid step
 
@@ -27,7 +32,11 @@ DEFAULT_BM = 256  # rows per grid step
 def _quant_kernel(x_ref, q_ref, scale_ref):
     x = x_ref[...].astype(jnp.float32)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    # max(amax/127, tiny): an all-zero row quantizes to zeros under any
+    # positive scale, but a *subnormal* row underflows amax/127 to 0.0 and
+    # x / 0 would poison the int8 payload with NaNs (kernels/lowp.py; the
+    # jnp quantizers in kernels/ref.py + core/error_feedback.py match)
+    scale = q8_scale(amax)
     q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     scale_ref[...] = scale
 
@@ -49,10 +58,19 @@ def _batch_rows(x, bm):
     return xb, tuple(batch), m, m + pad, n
 
 
+def _resolve_bm(x: jax.Array, bm):
+    """``bm=None`` -> TuningCache -> ``DEFAULT_BM`` (both EF kernels share
+    the one "quant_ef" cache family)."""
+    if bm is not None:
+        return int(bm)
+    *batch, m, n = x.shape
+    return int(resolve_block("quant_ef", (math.prod(batch), m, n), 0,
+                             x.dtype, DEFAULT_BM))
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def quantize_ef(x: jax.Array, *, bm: int = DEFAULT_BM,
-                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
-    """(..., m, n) fp -> ((..., m, n) int8, (..., m, 1) fp32 row scales)."""
+def _quantize_ef(x: jax.Array, *, bm: int,
+                 interpret: bool) -> tuple[jax.Array, jax.Array]:
     xp, batch, m, mm, n = _batch_rows(x, bm)
     nb = xp.shape[0]
     q, scale = pl.pallas_call(
@@ -73,10 +91,16 @@ def quantize_ef(x: jax.Array, *, bm: int = DEFAULT_BM,
             scale[:, :m].reshape((*batch, m, 1)))
 
 
+def quantize_ef(x: jax.Array, *, bm: int | None = None,
+                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(..., m, n) fp -> ((..., m, n) int8, (..., m, 1) fp32 row scales).
+    ``bm=None`` resolves TuningCache -> ``DEFAULT_BM``."""
+    return _quantize_ef(x, bm=_resolve_bm(x, bm), interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def dequant_add_ef(g: jax.Array, q: jax.Array, scale: jax.Array, *,
-                   bm: int = DEFAULT_BM, interpret: bool = False) -> jax.Array:
-    """``G + dequant(q, scale)`` fused; output dtype follows ``G``."""
+def _dequant_add_ef(g: jax.Array, q: jax.Array, scale: jax.Array, *,
+                    bm: int, interpret: bool) -> jax.Array:
     gp, batch, m, mm, n = _batch_rows(g, bm)
     qp, *_ = _batch_rows(q, bm)
     sp, *_ = _batch_rows(scale, bm)
@@ -94,3 +118,12 @@ def dequant_add_ef(g: jax.Array, q: jax.Array, scale: jax.Array, *,
         interpret=interpret,
     )(gp, qp, sp)
     return out[:, :m].reshape((*batch, m, n))
+
+
+def dequant_add_ef(g: jax.Array, q: jax.Array, scale: jax.Array, *,
+                   bm: int | None = None, interpret: bool = False
+                   ) -> jax.Array:
+    """``G + dequant(q, scale)`` fused; output dtype follows ``G``.
+    ``bm=None`` resolves TuningCache -> ``DEFAULT_BM``."""
+    return _dequant_add_ef(g, q, scale, bm=_resolve_bm(g, bm),
+                           interpret=interpret)

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 
 from repro.core.newton_schulz import NS_COEFFS
 
+from .lowp import q8_scale
+
 
 def dct_project_ref(g: jax.Array, q: jax.Array, out_dtype=None):
     """``g``: (..., m, n); ``q``: (n, n). Returns (S, per-column sq-norms)."""
@@ -51,7 +53,7 @@ def newton_schulz_ref(x: jax.Array, steps: int = 5, eps: float = 1e-7):
 def quantize_ef_ref(x: jax.Array):
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    scale = q8_scale(amax)   # max(amax/127, tiny) — lockstep with the kernel
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

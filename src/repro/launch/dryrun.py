@@ -128,7 +128,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              accum_dtype: str | None = None, save_hlo: str | None = None,
              sp_attn: bool = False, layout: str | None = None,
              microbatch: int | None = None, baseline: bool = False,
-             verbose: bool = True) -> dict:
+             device_arch: str | None = None, verbose: bool = True) -> dict:
     import dataclasses
 
     cfg = ARCHS[arch]
@@ -192,7 +192,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     report = analyze_compiled(
         compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
         n_devices=mesh.size, model_flops_total=mf,
-        tp_degree=mesh.shape["model"], compile_s=t_total)
+        tp_degree=mesh.shape["model"], compile_s=t_total,
+        device_arch=device_arch)
 
     if verbose:
         print(f"== {arch} x {shape_name} x {mesh_name} ==")
@@ -237,6 +238,11 @@ def main(argv=None):
     ap.add_argument("--baseline", action="store_true",
                     help="strip per-arch optimizations (paper-faithful)")
     ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--device-arch", default=None,
+                    help="accelerator roofline table to price the report "
+                         "against (repro.roofline.hw: v5e/v5p/a100/"
+                         "cpu-est); --arch is the *model*, this is the "
+                         "*device*; default REPRO_ARCH env or v5e")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--out", default=None, help="write JSON record(s) here")
     args = ap.parse_args(argv)
@@ -260,6 +266,7 @@ def main(argv=None):
                            sp_attn=args.sp_attn, layout=args.layout,
                            microbatch=args.microbatch,
                            baseline=args.baseline,
+                           device_arch=args.device_arch,
                            save_hlo=args.save_hlo)
         except Exception as e:                      # noqa: BLE001
             traceback.print_exc()

@@ -55,6 +55,17 @@ def build(argv=None):
                          "dct_adamw (or the projector for galore/frugal/"
                          "fira) — the whole fused/ZeRO/telemetry stack is "
                          "basis-agnostic (docs/transforms.md)")
+    ap.add_argument("--compute-dtype", default=None,
+                    choices=["fp32", "bf16", "int8"],
+                    help="projection-matmul precision for dct_adamw "
+                         "(DESIGN.md §15): int8 = quantized operands with "
+                         "exact int32 accumulation; error bounds gated in "
+                         "benchmarks/projection_errors.py")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="autotuned kernel block-size cache JSON "
+                         "(repro.tune, docs/tuning.md); loaded into the "
+                         "process-wide TuningCache before the step jits so "
+                         "block=None kernel launches resolve tuned blocks")
     ap.add_argument("--zero", default="off", choices=["off", "1"],
                     help="ZeRO-1 partitioning of the low-rank optimizer "
                          "state across the data axes; the fused step runs "
@@ -138,6 +149,14 @@ def main(argv=None) -> int:
     from repro.train.schedule import cosine_warmup
     from repro.train.steps import init_state, make_train_step
 
+    if args.tune_cache:
+        # must happen before the first jit: block=None resolution runs at
+        # trace time, and jit caches retraces only on shape/static changes
+        from repro.tune import tuning_cache
+        tuning_cache().load(args.tune_cache)
+        print(f"[train] loaded tuning cache {args.tune_cache} "
+              f"({len(tuning_cache())} entries)")
+
     cfg = get_config(args.arch, smoke=args.smoke)
     lr = cosine_warmup(args.lr, args.warmup, args.steps)
     chaos_plan = None
@@ -170,6 +189,24 @@ def main(argv=None) -> int:
                              f"{'/'.join(FUSED_FAMILY)}, "
                              f"not {args.optimizer!r}")
         opt_kw["fused"] = args.fused
+    if args.compute_dtype is not None:
+        if args.optimizer != "dct_adamw":
+            # only the dct_adamw preset exposes the rule's compute_dtype
+            # field; the other family presets pin fp32
+            raise SystemExit("--compute-dtype applies to dct_adamw, not "
+                             f"{args.optimizer!r}")
+        if args.compute_dtype != "fp32":
+            # the lowp mirror only exists on the fused paths; fail at the
+            # CLI instead of deep inside the first trace (fused="auto"
+            # resolves to the reference path off-TPU)
+            from repro.core import fused_step
+            if fused_step.resolve(args.fused or "auto") == "off":
+                raise SystemExit(
+                    f"--compute-dtype {args.compute_dtype} requires a fused "
+                    "dispatch mode; pass --fused on or --fused fft "
+                    "(the default --fused auto resolves to the reference "
+                    "path on this backend)")
+        opt_kw["compute_dtype"] = args.compute_dtype
     if args.basis is not None:
         if args.optimizer == "dct_adamw":
             opt_kw["basis"] = args.basis

@@ -100,6 +100,16 @@ class ProjectedAdamRule(MatrixRule):
     #   telemetry collector is installed (DESIGN.md §8). With no collector
     #   the traced graph is identical either way; False opts this rule out
     #   even under an active collector.
+    compute_dtype: str = "fp32"           # projection-matmul precision
+    #   (DESIGN.md §15): "fp32" (bit-identical default) | "bf16" | "int8"
+    #   (per-row/column scales folded into the epilogue). Applies to the
+    #   select+project pass and both back-projections on the fused modes
+    #   only — the reference path has no lowp mirror, so a non-fp32 dtype
+    #   with fused="off" (eager), or resolving to the reference path at
+    #   trace time (fused="auto" off-TPU, dense-basis projectors), raises
+    #   instead of silently running fp32. Error vs fp32 bounded by
+    #   fused_step.LOWP_ERROR_BOUNDS (gated in
+    #   benchmarks/projection_errors.py).
 
     def __post_init__(self):
         """Eager config validation: fail at construction with the allowed
@@ -115,6 +125,13 @@ class ProjectedAdamRule(MatrixRule):
         check("ef_dtype", self.ef_dtype, EF_DTYPES)
         check("ranking_norm", self.ranking_norm, RANKING_NORMS)
         check("fused", self.fused, fused_step.FUSED_MODES)
+        check("compute_dtype", self.compute_dtype, fused_step.COMPUTE_DTYPES)
+        if self.compute_dtype != "fp32" and self.fused == "off":
+            raise ValueError(
+                f"{type(self).__name__}: compute_dtype={self.compute_dtype!r} "
+                "requires the fused dataflow (fused='on'/'fft'); the fused"
+                "='off' reference path has no low-precision mirror and would "
+                "silently run fp32")
         if isinstance(self.rank, int) and self.rank < 1:
             raise ValueError(f"rank must be >= 1, got {self.rank}")
         if isinstance(self.update_interval, int) and self.update_interval < 1:
@@ -189,6 +206,17 @@ class ProjectedAdamRule(MatrixRule):
         # projectors (any registered basis backend); dense-basis kinds keep
         # the reference math (EF still goes fused)
         fused = mode != "off" and backend is not None
+        if self.compute_dtype != "fp32" and not fused:
+            # only the fused dataflow has the lowp mirror; refuse loudly
+            # instead of silently running fp32 (reachable past __post_init__
+            # via fused="auto" resolving to "off", or a dense-basis
+            # projector)
+            raise ValueError(
+                f"compute_dtype={self.compute_dtype!r} needs the fused "
+                f"dataflow, but this update resolved to the reference path "
+                f"(fused={self.fused!r} -> mode={mode!r}, "
+                f"projector={self.projector!r}); pass fused='on'/'fft' with "
+                "a registered basis backend")
 
         if state.ef is not None:
             gf = fused_step.ef_add(gf, state.ef, mode=mode)
@@ -249,7 +277,7 @@ class ProjectedAdamRule(MatrixRule):
                 sp = fused_step.select_and_project(
                     gf, q, r, norm=self.ranking_norm, mode=mode,
                     return_norms=want_stats, psum_axes=ctx.axis,
-                    backend=backend)
+                    backend=backend, compute_dtype=self.compute_dtype)
                 new_proj, g_low = sp[0], sp[1]
                 out = (new_proj, g_low)
                 if self.rotate:
@@ -261,7 +289,8 @@ class ProjectedAdamRule(MatrixRule):
                               else ())
 
             def keep(_):
-                g_low = fused_step.project_with_indices(gf, q, state.proj)
+                g_low = fused_step.project_with_indices(
+                    gf, q, state.proj, compute_dtype=self.compute_dtype)
                 out = ((state.proj, g_low) if not self.rotate
                        else (state.proj, eye_rot(), g_low))
                 return out + ((keep_aux(g_low),) if want_stats else ())
@@ -314,11 +343,13 @@ class ProjectedAdamRule(MatrixRule):
         if fused:
             if need_resid:
                 d, recon = fused_step.fused_dual_backproject(
-                    u_low, g_low, q, proj_state, mode=mode)
+                    u_low, g_low, q, proj_state, mode=mode,
+                    compute_dtype=self.compute_dtype)
                 resid = gf - recon
             else:
-                d = fused_step.fused_backproject(u_low, q, proj_state,
-                                                 mode=mode)
+                d = fused_step.fused_backproject(
+                    u_low, q, proj_state, mode=mode,
+                    compute_dtype=self.compute_dtype)
         else:
             d = p.backproject(u_low, proj_state, shared_q=q, n=cols)
             if need_resid:
@@ -394,6 +425,7 @@ def dct_adamw_transform(lr: Schedule, *, rank: int = 128,
                         error_feedback: bool = True, ef_dtype: str = "q8",
                         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
                         fused: str = "auto", basis: str = "dct",
+                        compute_dtype: str = "fp32",
                         overrides: dict | None = None) -> GradientTransform:
     """Matrix-leaf DCT-AdamW pipeline for ``partition``/``inject_hyperparams``.
     ``basis`` swaps the predefined orthogonal basis (any registered
@@ -401,7 +433,8 @@ def dct_adamw_transform(lr: Schedule, *, rank: int = 128,
     rule = _rule(dict(rank=rank, projector=basis,
                       update_interval=update_interval, rotate=True,
                       residual="ef" if error_feedback else "discard",
-                      ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps, fused=fused))
+                      ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps, fused=fused,
+                      compute_dtype=compute_dtype))
     return projected_adam_transform(rule, lr, weight_decay=weight_decay,
                                     overrides=overrides)
 
@@ -411,7 +444,7 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
               ef_dtype: str = "q8", b1: float = 0.9, b2: float = 0.999,
               eps: float = 1e-8, exact_rotation_matmul: bool = False,
               fused: str = "auto", basis: str = "dct",
-              basis_mode: str = "stored",
+              compute_dtype: str = "fp32", basis_mode: str = "stored",
               label_fn=None, overrides: dict | None = None,
               zero=None, lr_scale: bool = False) -> Optimizer:
     """The paper's DCT-AdamW (Algorithm 2). ``fused`` selects the execution
@@ -437,7 +470,7 @@ def dct_adamw(lr: Schedule, *, rank: int = 128, update_interval: int = 1,
                            residual="ef" if error_feedback else "discard",
                            ef_dtype=ef_dtype, b1=b1, b2=b2, eps=eps,
                            exact_rotation_matmul=exact_rotation_matmul,
-                           fused=fused), hk)
+                           fused=fused, compute_dtype=compute_dtype), hk)
 
 
 def ldadamw(lr: Schedule, *, rank: int = 128, weight_decay: float = 0.01,

@@ -39,6 +39,7 @@ class RooflineReport:
     compile_s: float = 0.0
     xla_flops: float = 0.0        # raw cost_analysis (loop bodies once)
     xla_bytes: float = 0.0
+    device_arch: str = "v5e"      # hw.ARCHS key the time terms were priced at
 
     @property
     def dominant(self) -> str:
@@ -53,9 +54,8 @@ class RooflineReport:
         The cost_analysis `bytes accessed` proxy is CPU-legalized (bf16
         operands get fp32 convert copies that a TPU never materializes), so
         the table reports both (EXPERIMENTS.md §Roofline notes)."""
-        from . import hw as _hw
         traffic = self.arg_bytes + max(self.out_bytes - self.alias_bytes, 0)
-        return traffic / _hw.HBM_BW
+        return traffic / hw.get_arch(self.device_arch).hbm_bw
 
     @property
     def step_s(self) -> float:
@@ -71,7 +71,8 @@ class RooflineReport:
     @property
     def mfu(self) -> float:
         """Model-FLOPs utilization at the roofline bound."""
-        denom = self.step_s * self.n_devices * hw.PEAK_FLOPS_BF16
+        denom = (self.step_s * self.n_devices
+                 * hw.get_arch(self.device_arch).peak_flops)
         return self.model_flops_total / denom if denom else 0.0
 
     def to_json(self) -> dict:
@@ -174,8 +175,8 @@ def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
 
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      n_devices: int, model_flops_total: float,
-                     tp_degree: int = 16, compile_s: float = 0.0
-                     ) -> RooflineReport:
+                     tp_degree: int = 16, compile_s: float = 0.0,
+                     device_arch: str | None = None) -> RooflineReport:
     from repro.parallel import compat
 
     from .hlo_cost import module_costs
@@ -195,14 +196,16 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
         "bytes": sum(v["bytes"] for v in mc.collectives.values())}
     wires = wire_bytes(colls, n_devices_hint=tp_degree)
     mem = compiled.memory_analysis()
+    spec = hw.get_arch(device_arch)
     return RooflineReport(
         arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
         flops_per_device=flops, bytes_per_device=byts,
         collectives=colls,
         wire_bytes_per_device=wires,
-        compute_s=flops / hw.PEAK_FLOPS_BF16,
-        memory_s=byts / hw.HBM_BW,
-        collective_s=wires / hw.ICI_BW,
+        compute_s=flops / spec.peak_flops,
+        memory_s=byts / spec.hbm_bw,
+        collective_s=wires / spec.ici_bw,
+        device_arch=spec.name,
         model_flops_total=model_flops_total,
         xla_flops=float(ca.get("flops", 0.0)),
         xla_bytes=float(ca.get("bytes accessed", 0.0)),

@@ -1,0 +1,60 @@
+"""Roofline-seeded kernel autotuner (DESIGN.md §15, docs/tuning.md).
+
+Three layers:
+
+  ``tune.cache``     — the process-wide :class:`TuningCache` the kernels
+                       resolve ``block=None`` against (stdlib-only, safe
+                       to import from kernel modules).
+  ``tune.prune``     — per-family block grids + roofline cost models; cuts
+                       each grid to a few plausible candidates before
+                       anything is timed.
+  ``tune.autotune``  — compile+run measurement over the survivors; stores
+                       winners in the cache (``python -m repro.tune`` is
+                       the CLI).
+
+The cache re-exports eagerly (kernels need it); everything that imports
+the kernels or roofline loads lazily via ``__getattr__`` so
+``repro.kernels -> repro.tune.cache`` never cycles back through
+``tune.autotune -> repro.kernels``.
+"""
+from __future__ import annotations
+
+from .cache import (
+    KERNELS,
+    TuningCache,
+    default_platform,
+    make_key,
+    resolve_block,
+    tuning_cache,
+)
+
+_LAZY = {
+    "prune": ("repro.tune.prune", None),
+    "autotune": ("repro.tune.autotune", None),
+    "candidate_blocks": ("repro.tune.prune", "candidate_blocks"),
+    "kernel_costs": ("repro.tune.prune", "kernel_costs"),
+    "roofline_report": ("repro.tune.prune", "roofline_report"),
+    "Candidate": ("repro.tune.prune", "Candidate"),
+    "measure": ("repro.tune.autotune", "measure"),
+    "tune_kernel": ("repro.tune.autotune", "tune_kernel"),
+    "tune_all": ("repro.tune.autotune", "tune_all"),
+    "default_block": ("repro.tune.autotune", "default_block"),
+    "REDUCED_SPECS": ("repro.tune.autotune", "REDUCED_SPECS"),
+    "FULL_SPECS": ("repro.tune.autotune", "FULL_SPECS"),
+}
+
+__all__ = ["KERNELS", "TuningCache", "default_platform", "make_key",
+           "resolve_block", "tuning_cache", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}") from None
+    import importlib
+    mod = importlib.import_module(module)
+    value = mod if attr is None else getattr(mod, attr)
+    globals()[name] = value
+    return value

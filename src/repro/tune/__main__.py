@@ -1,0 +1,63 @@
+"""Autotuner CLI: ``python -m repro.tune --out tune_cache.json``.
+
+Runs the roofline-pruned sweep (reduced grid by default; ``--full`` for
+production shapes), prints per-entry winners, and persists the cache JSON
+that ``--tune-cache`` on launch/train.py and benchmarks/run.py loads.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.roofline import hw
+
+from . import autotune
+from .cache import tuning_cache
+
+
+def _parse_shape(text: str) -> tuple[int, ...]:
+    return tuple(int(d) for d in text.replace("x", ",").split(",") if d)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--out", default="tune_cache.json",
+                    help="cache JSON to write (merged if it exists)")
+    ap.add_argument("--merge", action="store_true",
+                    help="load --out first and merge new winners into it")
+    ap.add_argument("--full", action="store_true",
+                    help="production-shaped sweep instead of the reduced grid")
+    ap.add_argument("--kernel", default=None,
+                    help="tune one kernel family only")
+    ap.add_argument("--shape", default=None, type=_parse_shape,
+                    help="override shape for --kernel, e.g. 2x1024x1024")
+    ap.add_argument("--rank", default=0, type=int)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--device-arch", default=None, choices=hw.arch_names(),
+                    help="roofline arch for pruning (default: REPRO_ARCH/v5e)")
+    ap.add_argument("--keep", default=4, type=int,
+                    help="survivors measured per entry after pruning")
+    ap.add_argument("--iters", default=3, type=int)
+    args = ap.parse_args(argv)
+
+    cache = tuning_cache()
+    if args.merge:
+        try:
+            cache.load(args.out)
+        except FileNotFoundError:
+            pass
+    if args.kernel:
+        shape = args.shape or dict(
+            (k, s) for k, s, _ in autotune.FULL_SPECS)[args.kernel]
+        specs = [(args.kernel, shape, args.rank)]
+    else:
+        specs = autotune.FULL_SPECS if args.full else autotune.REDUCED_SPECS
+    records = autotune.tune_all(specs, dtype=args.dtype,
+                                arch=args.device_arch, keep=args.keep,
+                                iters=args.iters, verbose=True)
+    cache.save(args.out)
+    print(f"[tune] wrote {len(cache)} entries -> {args.out}")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Process-wide tuned-block cache (DESIGN.md §15).
+
+``TuningCache`` is the kernel-side half of the autotuner: a
+``(kernel, shape, rank, dtype, platform) -> block`` memo that every
+Pallas entry point consults when called with ``block=None`` (the new
+default). Resolution order is
+
+    explicit block  >  TuningCache hit  >  the kernel's DEFAULT_BLOCK
+
+so an untuned process is bit-identical to the pre-autotuner repo: a miss
+returns exactly the hardcoded default the kernels have always shipped.
+
+This module is deliberately stdlib-only. The kernels import
+:func:`resolve_block` at module level, and ``tune/__init__`` re-exports
+the cache eagerly — if this file imported jax (or ``tune.autotune``,
+which imports the kernels) the package would cycle. The one jax touch —
+asking the runtime which platform we are on — is a lazy import inside
+:func:`default_platform`.
+
+Keys are fully static (ints/strings), so lookups happen at trace time:
+``block`` is a static jit argument, which means a cache entry loaded
+*after* a step function is compiled does not retrace it. Load the cache
+(``--tune-cache`` on launch/train.py and benchmarks/run.py) before the
+first step is jitted.
+
+The JSON file format (``save``/``load``) is a flat entry list::
+
+    {"version": 1,
+     "entries": [{"kernel": "dct_project", "shape": [1, 4096, 4096],
+                  "rank": 0, "dtype": "float32", "platform": "tpu",
+                  "block": [256, 256, 256]}, ...]}
+
+``block`` round-trips as a list (tuple-valued blocks) or a bare int
+(``bm``-style scalar blocks for quant_ef / newton_schulz).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+_FORMAT_VERSION = 1
+
+#: kernel families the cache knows how to key (autotune + tests iterate it)
+KERNELS = ("dct_project", "colgather_matmul", "colgather_matmul_dual",
+           "quant_ef", "newton_schulz")
+
+
+def default_platform() -> str:
+    """The jax backend platform string ("cpu"/"tpu"/"gpu"); "cpu" when jax
+    is unavailable (keeps this module importable anywhere)."""
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax is always present in-repo
+        return "cpu"
+
+
+def _dtype_str(dtype) -> str:
+    """"float32" from a np.dtype, a jnp scalar type, or a plain string —
+    without importing numpy (this module stays stdlib-only)."""
+    name = getattr(dtype, "name", None)        # np.dtype
+    if isinstance(name, str):
+        return name
+    return str(getattr(dtype, "__name__", dtype))  # jnp.float32 et al.
+
+
+def make_key(kernel: str, shape, rank: int, dtype, platform: str | None = None
+             ) -> tuple:
+    """Normalize to the canonical hashable key.
+
+    ``shape`` is the collapsed operand signature the kernel grids over
+    (e.g. ``(nb, m, n)`` for dct_project); ``rank`` is the subspace rank
+    where the kernel has one (0 otherwise — the slot stays so all
+    families share one schema); ``dtype`` is the operand dtype.
+    """
+    return (str(kernel), tuple(int(d) for d in shape), int(rank),
+            _dtype_str(dtype), str(platform or default_platform()))
+
+
+def _encode_block(block):
+    return list(block) if isinstance(block, (tuple, list)) else int(block)
+
+
+def _decode_block(block):
+    return tuple(int(b) for b in block) if isinstance(block, list) \
+        else int(block)
+
+
+class TuningCache:
+    """``make_key(...) -> block`` memo with hit/miss counters and JSON
+    persistence. Lives alongside :class:`BasisCache` (core/transforms.py
+    re-exports it) as the second process-wide kernel-configuration cache.
+    """
+
+    def __init__(self) -> None:
+        self._store: dict[tuple, tuple | int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._store
+
+    def lookup(self, key: tuple):
+        """The tuned block for ``key``, or None (counted as hit/miss)."""
+        block = self._store.get(key)
+        if block is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return block
+
+    def store(self, key: tuple, block) -> None:
+        self._store[key] = _decode_block(_encode_block(block))
+
+    def entries(self) -> dict:
+        return dict(self._store)
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0
+
+    # -- persistence --------------------------------------------------------
+    def to_json(self) -> dict:
+        ents = []
+        for (kernel, shape, rank, dtype, platform), block in sorted(
+                self._store.items()):
+            ents.append({"kernel": kernel, "shape": list(shape), "rank": rank,
+                         "dtype": dtype, "platform": platform,
+                         "block": _encode_block(block)})
+        return {"version": _FORMAT_VERSION, "entries": ents}
+
+    def from_json(self, doc: dict, *, replace: bool = False) -> int:
+        if doc.get("version") != _FORMAT_VERSION:
+            raise ValueError(f"tuning-cache version {doc.get('version')!r} "
+                             f"!= {_FORMAT_VERSION}")
+        if replace:
+            self._store.clear()
+        n = 0
+        for e in doc["entries"]:
+            key = make_key(e["kernel"], e["shape"], e["rank"], e["dtype"],
+                           e["platform"])
+            self._store[key] = _decode_block(e["block"])
+            n += 1
+        return n
+
+    def save(self, path: str) -> None:
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    def load(self, path: str, *, replace: bool = False) -> int:
+        """Merge (or replace) entries from ``path``; returns entry count."""
+        with open(path) as f:
+            return self.from_json(json.load(f), replace=replace)
+
+
+_CACHE = TuningCache()
+
+
+def tuning_cache() -> TuningCache:
+    """The process-wide cache instance (mirrors ``basis_cache()``)."""
+    return _CACHE
+
+
+def resolve_block(kernel: str, shape, rank: int, dtype, default,
+                  platform: str | None = None):
+    """``block=None`` resolution the kernel entry points call: tuned block
+    on a cache hit, the kernel's hardcoded ``default`` otherwise (the
+    bit-identical untuned path)."""
+    block = _CACHE.lookup(make_key(kernel, shape, rank, dtype, platform))
+    return default if block is None else block

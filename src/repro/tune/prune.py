@@ -1,0 +1,222 @@
+"""Roofline-seeded block-grid pruning (DESIGN.md §15).
+
+Exhaustively timing every block-size combination is what classical
+autotuners do; here the seed ``roofline/`` subsystem does most of that work
+analytically. For each candidate block we know, in closed form, the HBM
+traffic the grid layout implies (which tiles are re-fetched how many times)
+and the FLOP count — so each candidate gets a
+:class:`~repro.roofline.analysis.RooflineReport` priced at the active
+:mod:`repro.roofline.hw` arch, and the measurement harness only ever times
+the few candidates whose *predicted* ``step_s`` is competitive and whose
+working set fits the arch's VMEM envelope. The prediction is a bound, not
+a simulator — its job is ranking, and a handful of survivors
+(``keep``, default 4) absorbs the model error.
+
+Traffic models per kernel family (mirroring the BlockSpec index maps —
+a block whose index map does not change between consecutive grid steps
+stays resident and is not re-fetched):
+
+``dct_project`` (grid ``(nb, nj, ni, nk)``): the ``G`` tile walks ``(i,
+k)`` per output-column block, so ``G`` is read ``nj`` times; the ``Q``
+tile walks ``(k, j)`` per row block, so ``Q`` is read ``nb * ni`` times;
+``S`` and the norms are written once. Bigger ``bn`` cuts ``G`` re-reads,
+bigger ``bm`` cuts ``Q`` re-reads, bigger everything costs VMEM — exactly
+the tension the roofline arbitrates.
+
+``colgather_matmul[_dual]`` (grid ``(nb, nj, ni)``): the ``(n, bn)``
+stripe of ``Q^T`` and its gathered ``(r, bn)`` scratch are built once per
+``(b, j)``; the skinny ``b`` factor is re-read per column block (``nj``
+times); outputs written once.
+
+``quant_ef`` / ``newton_schulz`` are bandwidth-bound streaming kernels:
+traffic is block-independent to first order, so pruning is purely the
+VMEM-fit filter plus padding waste (a block that forces row/column padding
+streams the pad too).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline import hw
+from repro.roofline.analysis import RooflineReport
+
+_DTYPE_BYTES = {"float32": 4, "float64": 8, "bfloat16": 2, "float16": 2,
+                "int8": 1, "int32": 4}
+
+
+def dtype_bytes(dtype) -> int:
+    return _DTYPE_BYTES.get(str(dtype), 4)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One block-size candidate with its roofline prediction."""
+
+    block: tuple | int
+    flops: float
+    bytes: float
+    vmem_bytes: int
+    report: RooflineReport
+
+    @property
+    def predicted_s(self) -> float:
+        return self.report.step_s
+
+    @property
+    def bound(self) -> str:
+        """"compute" or "memory" — the dominant roofline term."""
+        return self.report.dominant
+
+
+# ---------------------------------------------------------------------------
+# candidate grids
+# ---------------------------------------------------------------------------
+def candidate_blocks(kernel: str, shape, rank: int = 0) -> list:
+    """The untuned search grid per kernel family (before pruning)."""
+    if kernel == "dct_project":
+        sizes = (128, 256, 512)
+        return [(bm, bn, bk) for bm in sizes for bn in sizes for bk in sizes]
+    if kernel in ("colgather_matmul", "colgather_matmul_dual"):
+        return [(bm, bn) for bm in (128, 256, 512, 1024)
+                for bn in (128, 256, 512)]
+    if kernel == "quant_ef":
+        return [64, 128, 256, 512, 1024]
+    if kernel == "newton_schulz":
+        return [128, 256, 512, 1024, 2048]
+    raise ValueError(f"unknown kernel family {kernel!r}")
+
+
+# ---------------------------------------------------------------------------
+# per-candidate cost model
+# ---------------------------------------------------------------------------
+def kernel_costs(kernel: str, shape, rank: int, dtype, block
+                 ) -> tuple[float, float, int]:
+    """(flops, hbm_bytes, vmem_bytes) for one candidate block.
+
+    ``shape`` is the collapsed operand signature the cache keys on:
+    ``(nb, m, n)`` for dct_project / colgather / quant_ef, ``(nb, r, m)``
+    (wide-oriented) for newton_schulz.
+    """
+    db = dtype_bytes(dtype)
+    if kernel == "dct_project":
+        nb, m, n = shape
+        bm, bn, bk = block
+        ni, nj, nk = _cdiv(m, bm), _cdiv(n, bn), _cdiv(n, bk)
+        mm, nn, kk = ni * bm, nj * bn, nk * bk
+        flops = 2.0 * nb * mm * nn * kk + 2.0 * nb * mm * nn  # matmul + norms
+        traffic = (nb * mm * kk * db * nj          # G re-read per column blk
+                   + kk * nn * db * nb * ni        # Q re-read per row blk
+                   + nb * mm * nn * db             # S written once
+                   + nb * nn * 4)                  # norms
+        vmem = (bm * bk + bk * bn) * db + bm * bn * db \
+            + bm * bn * 4 + bn * 4                 # tiles + fp32 acc + norms
+        return flops, float(traffic), int(vmem)
+
+    if kernel in ("colgather_matmul", "colgather_matmul_dual"):
+        nb, m, n = shape
+        r = rank or n
+        bm, bn = block
+        ni, nj = _cdiv(m, bm), _cdiv(n, bn)
+        mm, nn = ni * bm, nj * bn
+        nops = 2 if kernel.endswith("_dual") else 1
+        flops = 2.0 * nb * mm * r * nn * nops
+        traffic = (nops * nb * mm * r * db * nj    # b re-read per column blk
+                   + nb * n * nn * db              # Q^T stripe per (b, j)
+                   + nops * nb * mm * nn * db)     # outputs written once
+        vmem = bm * r * db * nops + n * bn * db + r * bn * db \
+            + bm * bn * db * nops                  # b tiles + stripe + gather
+        return flops, float(traffic), int(vmem)
+
+    if kernel == "quant_ef":
+        nb, m, n = shape
+        bm = int(block)
+        mm = _cdiv(m, bm) * bm
+        # quantize (read fp + write i8/scale) + fused dequant-add
+        flops = 8.0 * nb * mm * n
+        traffic = nb * mm * (n * (2 * db + 2 * 1) + 2 * 4)
+        vmem = bm * n * (db + 1) + bm * 4
+        return flops, float(traffic), int(vmem)
+
+    if kernel == "newton_schulz":
+        nb, r, m = shape
+        bm = int(block)
+        mm = _cdiv(m, bm) * bm
+        # per NS5 iteration: gram pass + apply pass (+ r^3 polynomial)
+        flops = 4.0 * nb * r * r * mm + 2.0 * nb * r ** 3
+        traffic = 3.0 * nb * r * mm * 4 + 2.0 * nb * r * r * 4
+        vmem = 2 * r * bm * 4 + 2 * r * r * 4
+        return flops, float(traffic), int(vmem)
+
+    raise ValueError(f"unknown kernel family {kernel!r}")
+
+
+def roofline_report(kernel: str, shape, rank: int, dtype, block, *,
+                    arch: str | None = None) -> Candidate:
+    """Price one candidate as a single-device RooflineReport at ``arch``."""
+    spec = hw.get_arch(arch)
+    flops, traffic, vmem = kernel_costs(kernel, shape, rank, dtype, block)
+    report = RooflineReport(
+        arch=f"{kernel}:{'x'.join(map(str, shape))}", shape=str(block),
+        mesh="local", n_devices=1, flops_per_device=flops,
+        bytes_per_device=traffic, collectives={}, wire_bytes_per_device=0.0,
+        compute_s=flops / spec.peak_flops, memory_s=traffic / spec.hbm_bw,
+        collective_s=0.0, model_flops_total=flops, device_arch=spec.name)
+    return Candidate(block=block, flops=flops, bytes=traffic,
+                     vmem_bytes=vmem, report=report)
+
+
+def prune(kernel: str, shape, rank: int = 0, dtype="float32", *,
+          arch: str | None = None, keep: int = 4,
+          vmem_frac: float = 0.9) -> list[Candidate]:
+    """The autotuner's grid pruner: every candidate priced by the roofline,
+    VMEM-misfits dropped, survivors sorted by predicted ``step_s`` and cut
+    to the ``keep`` best. If *nothing* fits the arch's VMEM envelope (tiny
+    ``vmem_bytes`` arch entries), the ``keep`` smallest-footprint
+    candidates survive so tuning can still measure something.
+    """
+    spec = hw.get_arch(arch)
+    cands = [roofline_report(kernel, shape, rank, dtype, b, arch=arch)
+             for b in candidate_blocks(kernel, shape, rank)]
+    fit = [c for c in cands if c.vmem_bytes <= spec.vmem_bytes * vmem_frac]
+    if not fit:
+        fit = sorted(cands, key=lambda c: c.vmem_bytes)[:keep]
+    fit.sort(key=lambda c: (c.predicted_s, c.vmem_bytes))
+    return fit[:max(1, int(keep))]
+
+
+def predicted_bound(kernel: str, shape, rank: int = 0, dtype="float32", *,
+                    block=None, arch: str | None = None) -> str:
+    """"compute" or "memory" for one (kernel, shape) at ``arch`` — the
+    headline roofline classification (docs/tuning.md)."""
+    if block is None:
+        block = candidate_blocks(kernel, shape, rank)[0]
+    return roofline_report(kernel, shape, rank, dtype, block,
+                           arch=arch).bound
+
+
+def grid_size(kernel: str, shape, rank: int = 0) -> int:
+    return len(candidate_blocks(kernel, shape, rank))
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(b) < 1024 or unit == "GiB":
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}GiB"  # pragma: no cover
+
+
+def describe(c: Candidate) -> str:
+    """One-line human summary (the __main__ CLI prints these)."""
+    return (f"block={c.block} pred={c.predicted_s * 1e6:.1f}us "
+            f"bound={c.bound} vmem={_fmt_bytes(c.vmem_bytes)} "
+            f"intensity={c.flops / max(c.bytes, 1.0):.1f}")
+
+
+__all__ = ["Candidate", "candidate_blocks", "kernel_costs",
+           "roofline_report", "prune", "predicted_bound", "grid_size",
+           "describe", "dtype_bytes"]
